@@ -1,0 +1,29 @@
+"""Shared benchmark utilities: timing, result persistence, CSV emission."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Any, Callable, Dict, List
+
+RESULTS_DIR = pathlib.Path(__file__).parent / "results"
+
+
+def save_results(name: str, rows: List[Dict[str, Any]]) -> None:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    (RESULTS_DIR / f"{name}.json").write_text(json.dumps(rows, indent=1, default=str))
+
+
+def timed(fn: Callable, *args, repeats: int = 3, **kwargs):
+    """Returns (result, best_us_per_call)."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return out, best
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,77 @@
+"""Kernel micro-bench: Pallas (interpret-mode on CPU) vs the pure-jnp
+oracle, plus the jnp oracle's own wall time as the CPU throughput line.
+On-TPU performance is roofline-derived (EXPERIMENTS.md §Roofline) — these
+numbers validate correctness paths and give the CPU-container baseline.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.kernels import cheb_attn, flash_attn, poly_attn, ref
+
+
+def run(fast: bool = False) -> List[Dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # cheb_attn: FedGAT-scale graph aggregation
+    n, b, d = (128, 16, 128) if fast else (512, 32, 128)
+    x = jnp.clip(jax.random.normal(key, (n, b)), -3.5, 3.5)
+    h = jax.random.normal(jax.random.PRNGKey(1), (n, b, d))
+    m = jnp.ones((n, b))
+    # real attention series (positive on the domain -> well-conditioned den)
+    from repro.core.chebyshev import attention_series
+
+    coeffs = jnp.asarray(attention_series(16, (-4.0, 4.0)), jnp.float32)
+
+    ref_fn = jax.jit(ref.cheb_attn_ref)
+    ref_fn(x, h, m, coeffs)
+    _, us_ref = timed(lambda: jax.block_until_ready(ref_fn(x, h, m, coeffs)))
+    out_k = cheb_attn(x, h, m, coeffs, block_n=128, block_d=128)  # compile
+    _, us_krn = timed(lambda: jax.block_until_ready(
+        cheb_attn(x, h, m, coeffs, block_n=128, block_d=128)))
+    err = float(jnp.abs(out_k - ref.cheb_attn_ref(x, h, m, coeffs)).max())
+    rows.append({"kernel": "cheb_attn", "shape": f"N{n}xB{b}xD{d}p16",
+                 "us_ref_jnp": us_ref, "us_pallas_interpret": us_krn, "max_err": err})
+
+    # flash_attn
+    B, H, S, hd = (1, 2, 256, 64) if fast else (2, 4, 512, 64)
+    q = jax.random.normal(key, (B, H, S, hd))
+    k = jax.random.normal(jax.random.PRNGKey(2), (B, H, S, hd))
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, H, S, hd))
+    ref_fn = jax.jit(ref.flash_attn_ref)
+    ref_fn(q, k, v)
+    _, us_ref = timed(lambda: jax.block_until_ready(ref_fn(q, k, v)))
+    out_k = flash_attn(q, k, v, block_q=128, block_k=128)
+    _, us_krn = timed(lambda: jax.block_until_ready(
+        flash_attn(q, k, v, block_q=128, block_k=128)))
+    err = float(jnp.abs(out_k - ref.flash_attn_ref(q, k, v)).max())
+    rows.append({"kernel": "flash_attn", "shape": f"B{B}H{H}S{S}hd{hd}",
+                 "us_ref_jnp": us_ref, "us_pallas_interpret": us_krn, "max_err": err})
+
+    # poly_attn
+    from repro.core.chebyshev import attention_series
+
+    a1 = jax.random.normal(jax.random.PRNGKey(4), (H, hd)) * 0.1
+    a2 = jax.random.normal(jax.random.PRNGKey(5), (H, hd)) * 0.1
+    pc = jnp.asarray(attention_series(8, (-4.0, 4.0)), jnp.float32)
+    ref_fn = jax.jit(ref.poly_attn_ref)
+    ref_fn(q, k, a1, a2, v, pc)
+    _, us_ref = timed(lambda: jax.block_until_ready(ref_fn(q, k, a1, a2, v, pc)))
+    out_k = poly_attn(q, k, v, a1, a2, pc, block_q=128, block_k=128)
+    _, us_krn = timed(lambda: jax.block_until_ready(
+        poly_attn(q, k, v, a1, a2, pc, block_q=128, block_k=128)))
+    err = float(jnp.abs(out_k - ref.poly_attn_ref(q, k, a1, a2, v, pc)).max())
+    rows.append({"kernel": "poly_attn", "shape": f"B{B}H{H}S{S}hd{hd}p8",
+                 "us_ref_jnp": us_ref, "us_pallas_interpret": us_krn, "max_err": err})
+    return rows
+
+
+def derived(rows: List[Dict]) -> str:
+    worst = max(r["max_err"] for r in rows)
+    return f"kernels={len(rows)} worst_err={worst:.2e} (interpret-mode validation)"

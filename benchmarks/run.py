@@ -1,0 +1,58 @@
+"""Benchmark orchestrator — one module per paper table/figure/theorem.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call = wall time of the
+whole experiment; derived = the experiment's headline numbers), and writes
+full row dumps to benchmarks/results/<name>.json.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import csv_row, save_results
+
+BENCHES = [
+    ("thm2_cheb_error", "benchmarks.thm2_cheb_error"),
+    ("thm35_error_prop", "benchmarks.thm35_error_prop"),
+    ("table1_accuracy", "benchmarks.table1_accuracy"),
+    ("fig2_clients", "benchmarks.fig2_clients"),
+    ("fig3_comm", "benchmarks.fig3_comm"),
+    ("fig5_degree", "benchmarks.fig5_degree"),
+    ("fig6_vector", "benchmarks.fig6_vector"),
+    ("stability_basis", "benchmarks.stability_basis"),
+    ("kernel_bench", "benchmarks.kernel_bench"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="reduced sweeps")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    import importlib
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, modpath in BENCHES:
+        if args.only and args.only != name:
+            continue
+        mod = importlib.import_module(modpath)
+        t0 = time.perf_counter()
+        try:
+            rows = mod.run(fast=args.fast)
+            us = (time.perf_counter() - t0) * 1e6
+            save_results(name, rows)
+            print(csv_row(name, us, mod.derived(rows)), flush=True)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            us = (time.perf_counter() - t0) * 1e6
+            print(csv_row(name, us, f"FAILED: {type(e).__name__}: {e}"), flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""FedGAT engines + privacy identities, hands-on.
+
+Shows that (1) Matrix, Vector, kernel and direct engines produce the SAME
+updates; (2) the communicated pack reveals only AGGREGATE neighbourhood
+information (paper §5 privacy analysis); (3) the Chebyshev degree controls
+the approximation error with the Theorem-2/3 behaviour.
+
+  PYTHONPATH=src python examples/engines_and_privacy.py
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    FedGATConfig,
+    fedgat_forward,
+    gat_layer_nbr,
+    init_params,
+    make_pack,
+    poly_gat_layer,
+    precompute_pack,
+)
+from repro.graphs import make_cora_like
+
+
+def main() -> int:
+    g = make_cora_like("tiny", seed=0)
+    h = jnp.asarray(g.features)
+    nbr_idx, nbr_mask = jnp.asarray(g.nbr_idx), jnp.asarray(g.nbr_mask)
+    params = init_params(jax.random.PRNGKey(0), g.feature_dim, g.num_classes,
+                         FedGATConfig())
+
+    print("=== engine agreement (same logits from all engines) ===")
+    outs = {}
+    for engine in ("direct", "matrix", "vector", "kernel"):
+        cfg = FedGATConfig(degree=12, engine=engine)
+        coeffs = jnp.asarray(cfg.coeffs(), jnp.float32)
+        pack = make_pack(jax.random.PRNGKey(1), cfg, h, nbr_idx, nbr_mask)
+        outs[engine] = np.asarray(
+            fedgat_forward(params, cfg, coeffs, pack, h, nbr_idx, nbr_mask)
+        )
+        diff = np.abs(outs[engine] - outs["direct"]).max()
+        print(f"  {engine:7s} max |logits - direct| = {diff:.2e}")
+
+    print("\n=== privacy: the pack reveals only aggregates (paper §5) ===")
+    pack = precompute_pack(jax.random.PRNGKey(2), h, nbr_idx, nbr_mask)
+    i = 5
+    agg = np.einsum("g,gd->d", np.asarray(pack.K1[i]), np.asarray(pack.K2[i]))
+    true_agg = (np.asarray(h)[np.asarray(nbr_idx[i])]
+                * np.asarray(nbr_mask[i])[:, None]).sum(0)
+    print(f"  K1^T K2 / 2 == sum_j h_j ? "
+          f"max err {np.abs(agg / 2 - true_agg).max():.2e}")
+    deg = int(np.asarray(nbr_mask[i]).sum())
+    k1k1 = float(np.asarray(pack.K1[i]) @ np.asarray(pack.K1[i]))
+    print(f"  K1^T K1 / 2 == deg(i) ?  {k1k1 / 2:.2f} vs {deg}")
+    print("  individual h_j is NOT recoverable: only sums appear.")
+
+    print("\n=== approximation error vs degree (Theorems 2-4) ===")
+    exact = gat_layer_nbr(params[0], h, nbr_idx, nbr_mask, concat=True)
+    for p in (4, 8, 16, 32):
+        cfg = FedGATConfig(degree=p, basis="chebyshev")
+        coeffs = jnp.asarray(cfg.coeffs(), jnp.float32)
+        approx = poly_gat_layer(params[0], coeffs, h, nbr_idx, nbr_mask,
+                                basis="chebyshev")
+        err = float(jnp.abs(approx - exact).max())
+        print(f"  degree {p:2d}: max layer-1 embedding error {err:.5f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,45 @@
+"""Quickstart: FedGAT in ~40 lines.
+
+Builds a synthetic citation graph, runs the ONE pre-training communication
+round, trains a 2-layer FedGAT across 8 federated clients with FedAvg, and
+compares with the centralised GAT upper bound.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+from repro.core import FedGATConfig
+from repro.federated import FederatedConfig, run_federated, train_centralized
+from repro.graphs import make_cora_like
+
+
+def main() -> int:
+    graph = make_cora_like("cora_like", seed=0)
+    print(f"graph: {graph.num_nodes} nodes, {int(graph.adj.sum()) // 2} edges, "
+          f"{graph.num_classes} classes, max degree {graph.max_degree}")
+
+    # --- centralised GAT (the accuracy upper bound, paper Table 1) ---
+    central = train_centralized(graph, model="gat", steps=80)
+    print(f"centralised GAT  : test acc {central['best_test']:.3f}")
+
+    # --- FedGAT: one pre-training communication round + FedAvg rounds ---
+    cfg = FederatedConfig(
+        method="fedgat",
+        num_clients=8,
+        beta=1.0,                      # non-iid Dirichlet label split
+        rounds=60,
+        local_steps=3,
+        lr=0.02,
+        model=FedGATConfig(engine="vector", degree=16),  # Appendix-F engine
+    )
+    fed = run_federated(graph, cfg)
+    print(f"FedGAT (8 clients, non-iid): test acc {fed['best_test']:.3f}")
+    print(f"pre-training communication: {fed['comm'].download_scalars:,} scalars "
+          f"({fed['comm'].cross_client_edges} cross-client edges kept)")
+    gap = central["best_test"] - fed["best_test"]
+    print(f"gap to centralised GAT: {gap:+.3f} (paper: near-zero)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,7 @@
+"""repro: FedGAT reproduction + multi-pod JAX training/inference framework.
+
+Subpackages: core (the paper's algorithm), graphs, federated, models,
+kernels, configs, launch, optim, data, checkpoint, analysis.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,49 @@
+"""Minimal npz checkpointing for pytrees (params + opt state + step).
+
+Leaves are flattened with '/'-joined key paths; container structure is
+rebuilt from a treedef produced by the caller's template at load time, so
+restores are structure-safe.
+"""
+from __future__ import annotations
+
+import pathlib
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    flat["__step__"] = np.asarray(step)
+    np.savez_compressed(p, **flat)
+
+
+def load_checkpoint(path: str, template: Any) -> Tuple[Any, int]:
+    """Restore into the structure of ``template`` (shape/dtype preserved)."""
+    data = np.load(path, allow_pickle=False)
+    step = int(data["__step__"])
+    flat_t = _flatten(template)
+    missing = [k for k in flat_t if k not in data]
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {missing[:5]}...")
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    new_leaves = []
+    for (path, leaf), _ in zip(paths, leaves):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = data[key]
+        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step

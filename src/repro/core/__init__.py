@@ -1,0 +1,19 @@
+from repro.core import chebyshev
+from repro.core.fedgat_matrix import FedGATPack, fedgat_layer_matrix, precompute_pack
+from repro.core.fedgat_model import FedGATConfig, fedgat_forward, init_params, make_pack
+from repro.core.fedgat_vector import VectorPack, fedgat_layer_vector, precompute_vector_pack
+from repro.core.gat import (
+    gat_forward,
+    gat_layer_dense,
+    gat_layer_nbr,
+    init_gat_params,
+    masked_accuracy,
+    masked_cross_entropy,
+)
+from repro.core.gcn import gcn_forward, init_gcn_params, normalized_adjacency
+from repro.core.poly_attention import (
+    edge_scores,
+    head_projections,
+    moments_direct,
+    poly_gat_layer,
+)

@@ -1,0 +1,176 @@
+"""Matrix FedGAT — the paper's main algorithm (§4, Algorithm 1 & 2).
+
+Server-side pre-training pack (per node i, padded max degree B, g = 2B):
+
+* orthonormal pairs {u1_j, u2_j} (columns of a random orthogonal matrix),
+* projectors  U_j = 1/2 (u1 u1^T + u2 u2^T + r u1 u2^T + (1/r) u2 u1^T),
+  which satisfy U_j^2 = U_j and U_j U_k = 0 for j != k,
+* P_i  = sum_j U_j                      (g, g)   [M1_i(s) = h_i(s) P_i]
+* M2_i(s) = sum_j h_j(s) U_j            (d, g, g)
+* K1_i = sqrt(2) sum_j u1_j             (g,)
+* K2_i = sqrt(2) sum_j u1_j h_j^T       (g, d)
+
+Note M1_i(s) = h_i(s) * P_i exactly (Eq. 13), so we store P_i once instead
+of d copies — mathematically identical, and the communication-cost meter
+(federated/comm.py) still charges the paper's full O(d B^2) per Theorem 1.
+
+Client-side training computation (per head):
+
+  D_i = (b1.h_i) P_i + sum_s b2(s) M2_i(s)                      (Eq. 14)
+  E_i^(n) = (K1^T D^n K2)^T,  F_i^(n) = K1^T D^n K1             (Eq. 12)
+
+evaluated with the vector recurrence v_n = D^T v_{n-1}, v_0 = P^T K1
+(O(p g^2) per node instead of the naive O(p g^3) matrix powers), in either
+the paper's monomial basis or the stable Chebyshev basis
+(C_0 = P, C_1 = D/R, C_{n+1} = 2 (D/R) C_n - C_{n-1} — valid because P is
+the unit of the algebra spanned by {U_j}).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.poly_attention import head_projections
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+class FedGATPack(NamedTuple):
+    """Pre-training communication payload for all nodes (stacked)."""
+
+    P: Array      # (N, g, g)    sum_j U_j  (carries M1 via h_i(s) * P)
+    M2: Array     # (N, d, g, g) sum_j h_j(s) U_j
+    K1: Array     # (N, g)
+    K2: Array     # (N, g, d)
+    r: float      # obfuscation constant used in U_j
+
+
+def make_projectors(key: Array, nbr_mask: Array, r: float) -> Tuple[Array, Array, Array]:
+    """Per-node orthonormal pairs and projectors.
+
+    nbr_mask: (N, B) validity. Returns (U, u1, u2):
+      U  (N, B, g, g), u1/u2 (N, B, g) with invalid slots zeroed, g = 2B.
+    """
+    n, b = nbr_mask.shape
+    g = 2 * b
+    normal = jax.random.normal(key, (n, g, g))
+    q, _ = jnp.linalg.qr(normal)                       # (N, g, g) orthogonal
+    u1 = jnp.transpose(q[:, :, 0::2], (0, 2, 1))       # (N, B, g)
+    u2 = jnp.transpose(q[:, :, 1::2], (0, 2, 1))       # (N, B, g)
+    valid = nbr_mask[..., None].astype(u1.dtype)
+    u1 = u1 * valid
+    u2 = u2 * valid
+    U = 0.5 * (
+        jnp.einsum("nbg,nbh->nbgh", u1, u1)
+        + jnp.einsum("nbg,nbh->nbgh", u2, u2)
+        + r * jnp.einsum("nbg,nbh->nbgh", u1, u2)
+        + (1.0 / r) * jnp.einsum("nbg,nbh->nbgh", u2, u1)
+    )
+    return U, u1, u2
+
+
+def precompute_pack(
+    key: Array, h: Array, nbr_idx: Array, nbr_mask: Array, r: float = 1.7
+) -> FedGATPack:
+    """Algorithm 1: the server computes the pack from raw features."""
+    U, u1, _ = make_projectors(key, nbr_mask, r)
+    h_nb = h[nbr_idx] * nbr_mask[..., None].astype(h.dtype)   # (N, B, d)
+    P = jnp.sum(U, axis=1)                                     # (N, g, g)
+    M2 = jnp.einsum("nbd,nbgh->ndgh", h_nb, U)                 # (N, d, g, g)
+    K1 = jnp.sqrt(2.0) * jnp.sum(u1, axis=1)                   # (N, g)
+    K2 = jnp.sqrt(2.0) * jnp.einsum("nbg,nbd->ngd", u1, h_nb)  # (N, g, d)
+    return FedGATPack(P=P, M2=M2, K1=K1, K2=K2, r=r)
+
+
+def build_D(pack: FedGATPack, h: Array, b1: Array, b2: Array) -> Array:
+    """D_i per head (Eq. 14). b1/b2: (H, d). -> (H, N, g, g)."""
+    s1 = jnp.einsum("nd,hd->hn", h, b1)                        # b1 . h_i
+    D = s1[:, :, None, None] * pack.P[None]
+    D = D + jnp.einsum("hd,ndgk->hngk", b2, pack.M2)
+    return D
+
+
+def series_moments(
+    pack: FedGATPack,
+    D: Array,
+    coeffs: Array,
+    *,
+    basis: str = "power",
+    domain: Tuple[float, float] = (-4.0, 4.0),
+) -> Tuple[Array, Array]:
+    """sum_n c_n E^(n), sum_n c_n F^(n) via the v-recurrence.
+
+    D: (H, N, g, g). Returns (S_E: (H, N, d), S_F: (H, N)).
+    """
+    coeffs = jnp.asarray(coeffs, dtype=D.dtype)
+    v0 = jnp.einsum("ngh,ng->nh", pack.P, pack.K1)             # P^T K1 (N, g)
+    v0 = jnp.broadcast_to(v0[None], D.shape[:2] + v0.shape[1:])
+
+    def em(v):  # E-moment contribution  K2^T v
+        return jnp.einsum("ngd,hng->hnd", pack.K2, v)
+
+    def fm(v):  # F-moment contribution  K1 . v
+        return jnp.einsum("ng,hng->hn", pack.K1, v)
+
+    if basis == "power":
+        def body(carry, cn):
+            v, SE, SF = carry
+            SE = SE + cn * em(v)
+            SF = SF + cn * fm(v)
+            v = jnp.einsum("hngk,hng->hnk", D, v)  # v <- D^T v
+            return (v, SE, SF), None
+
+        init = (v0, jnp.zeros(D.shape[:2] + (pack.K2.shape[-1],), D.dtype),
+                jnp.zeros(D.shape[:2], D.dtype))
+        (v, SE, SF), _ = jax.lax.scan(body, init, coeffs)
+        return SE, SF
+
+    if basis == "chebyshev":
+        lo, hi = domain
+        if abs(lo + hi) > 1e-9:
+            raise ValueError("chebyshev basis assumes symmetric domain")
+        R = hi
+        Dt = D / R
+
+        def step(v):
+            return jnp.einsum("hngk,hng->hnk", Dt, v)
+
+        SE = coeffs[0] * em(v0)
+        SF = coeffs[0] * fm(v0)
+        w_prev, w = v0, step(v0)
+
+        def body(carry, cn):
+            w_prev, w, SE, SF = carry
+            SE = SE + cn * em(w)
+            SF = SF + cn * fm(w)
+            w_next = 2.0 * step(w) - w_prev
+            return (w, w_next, SE, SF), None
+
+        (w_prev, w, SE, SF), _ = jax.lax.scan(body, (w_prev, w, SE, SF), coeffs[1:])
+        return SE, SF
+
+    raise ValueError(f"unknown basis {basis!r}")
+
+
+def fedgat_layer_matrix(
+    params: Params,
+    pack: FedGATPack,
+    h: Array,
+    coeffs: Array,
+    *,
+    basis: str = "power",
+    domain: Tuple[float, float] = (-4.0, 4.0),
+    concat: bool = True,
+) -> Array:
+    """Approximate first-layer GAT update from the communicated pack (Eq. 7)."""
+    b1, b2 = head_projections(params)
+    D = build_D(pack, h, b1, b2)
+    SE, SF = series_moments(pack, D, coeffs, basis=basis, domain=domain)
+    agg = SE / SF[..., None]                                   # (H, N, d_in)
+    out = jnp.einsum("hnd,hdo->hno", agg, params["W"])
+    if concat:
+        return jnp.transpose(out, (1, 0, 2)).reshape(h.shape[0], -1)
+    return out.mean(axis=0)

@@ -1,0 +1,127 @@
+"""End-to-end FedGAT model (paper §4 "FedGAT for Multiple GAT Layers").
+
+Layer 1 — the only layer that needs raw cross-client features — runs the
+approximate FedGAT update from the pre-communicated pack. Layers l > 1 use
+the exact GAT update on layer-(l-1) embeddings, which the paper permits
+clients to exchange (they are highly non-linear in the inputs).
+
+Engines for layer 1:
+  * "matrix" — Matrix FedGAT (paper §4, Algorithm 1/2)
+  * "vector" — Vector FedGAT (paper Appendix F)
+  * "direct" — the mathematical oracle (same numbers, no pack; used for
+                large simulations and as kernel reference)
+  * "kernel" — fused Pallas polynomial-attention kernel (interpret mode on
+                CPU, TPU-tiled BlockSpecs; see repro/kernels)
+  * "exact"  — plain GAT (degenerate engine, for baselines)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import chebyshev
+from repro.core.fedgat_matrix import FedGATPack, fedgat_layer_matrix, precompute_pack
+from repro.core.fedgat_vector import VectorPack, fedgat_layer_vector, precompute_vector_pack
+from repro.core.gat import elu, gat_layer_nbr, init_gat_params
+from repro.core.poly_attention import poly_gat_layer
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class FedGATConfig:
+    hidden: int = 8
+    heads: int = 8
+    out_heads: int = 1
+    num_layers: int = 2               # >=2; layer 1 approximate, rest exact
+    degree: int = 16                  # Chebyshev truncation degree p
+    domain: Tuple[float, float] = (-4.0, 4.0)
+    basis: str = "power"              # "power" (paper) | "chebyshev" (stable)
+    engine: str = "matrix"            # layer-1 engine
+    leaky_slope: float = 0.2
+    r: float = 1.7                    # projector obfuscation constant
+
+    def coeffs(self) -> np.ndarray:
+        return chebyshev.attention_series(
+            self.degree, self.domain, self.leaky_slope, basis=self.basis
+        )
+
+
+def init_params(key: Array, d_in: int, num_classes: int, cfg: FedGATConfig):
+    if cfg.num_layers <= 2:
+        return init_gat_params(
+            key, d_in, cfg.hidden, num_classes, cfg.heads, cfg.out_heads
+        )
+    # L-layer GAT: concat heads between hidden layers (paper §4 multi-layer)
+    from repro.core.gat import init_gat_layer
+
+    keys = jax.random.split(key, cfg.num_layers)
+    params = [init_gat_layer(keys[0], d_in, cfg.hidden, cfg.heads)]
+    for li in range(1, cfg.num_layers - 1):
+        params.append(
+            init_gat_layer(keys[li], cfg.hidden * cfg.heads, cfg.hidden, cfg.heads)
+        )
+    params.append(
+        init_gat_layer(keys[-1], cfg.hidden * cfg.heads, num_classes, cfg.out_heads)
+    )
+    return params
+
+
+def make_pack(
+    key: Array, cfg: FedGATConfig, h: Array, nbr_idx: Array, nbr_mask: Array
+) -> Optional[Any]:
+    """Pre-training communication round (engine-dependent payload)."""
+    if cfg.engine == "matrix":
+        return precompute_pack(key, h, nbr_idx, nbr_mask, cfg.r)
+    if cfg.engine == "vector":
+        return precompute_vector_pack(key, h, nbr_idx, nbr_mask)
+    return None  # direct / kernel / exact need no pack
+
+
+def fedgat_forward(
+    params: Sequence[Any],
+    cfg: FedGATConfig,
+    coeffs: Array,
+    pack: Optional[Any],
+    h: Array,
+    nbr_idx: Array,
+    nbr_mask: Array,
+) -> Array:
+    """Two-layer FedGAT forward -> class logits (N, C)."""
+    p1 = params[0]
+    if cfg.engine == "matrix":
+        x = fedgat_layer_matrix(
+            p1, pack, h, coeffs, basis=cfg.basis, domain=cfg.domain, concat=True
+        )
+    elif cfg.engine == "vector":
+        x = fedgat_layer_vector(
+            p1, pack, h, coeffs, basis=cfg.basis, domain=cfg.domain, concat=True
+        )
+    elif cfg.engine == "direct":
+        x = poly_gat_layer(
+            p1, coeffs, h, nbr_idx, nbr_mask,
+            basis=cfg.basis, domain=cfg.domain, concat=True,
+        )
+    elif cfg.engine == "kernel":
+        from repro.kernels import ops as kernel_ops  # lazy: pallas import
+
+        x = kernel_ops.cheb_attn_layer(
+            p1, coeffs, h, nbr_idx, nbr_mask,
+            basis=cfg.basis, domain=cfg.domain, concat=True,
+        )
+    elif cfg.engine == "exact":
+        x = gat_layer_nbr(p1, h, nbr_idx, nbr_mask, concat=True)
+    else:
+        raise ValueError(f"unknown engine {cfg.engine!r}")
+    x = elu(x)
+    # Layers > 1: exact GAT update (paper: post-layer-1 embeddings shareable).
+    for li in range(1, len(params)):
+        last = li == len(params) - 1
+        x = gat_layer_nbr(params[li], x, nbr_idx, nbr_mask, concat=not last)
+        if not last:
+            x = elu(x)
+    return x

@@ -1,0 +1,124 @@
+"""Vector FedGAT — the paper's Appendix F efficient variant.
+
+Replaces the 2B x 2B projector matrices with disjoint-support binary vectors
+and masks, cutting pre-training communication from O(d B^3) per client to
+O(d B^2) (Theorem 1 vs Appendix F) at the cost of the weaker, conditional
+privacy argument the paper notes.
+
+Layout (per node i, padded degree B, g = 2B):
+  u_j = e_{2j}                      (valid neighbour slots live on EVEN idx)
+  masks live on ODD indices         (obfuscation; orthogonal to all u_j)
+
+Communicated quantities (Appendix F):
+  M1_i = mask1_i + h_i (sum_j u_j)^T        (d, g)
+  M2_i = mask2_i + sum_j h_j u_j^T          (d, g)
+  K1_i = mask3_i + sum_j u_j h_j^T          (g, d)
+  K2_i = mask4_i = valid-even-slot indicator (g,)
+  K3_i = mask5_i + sum_j u_j                 (g,)
+
+Client-side (per head):
+  D = b1^T M1 + b2^T M2                      (g,)
+  R = D * mask4          -> R = sum_j x_ij u_j^T   (elementwise masking)
+  s = Horner(q, R) * mask4   (the n=0 term must be q_0 on VALID slots only)
+  E-series = s @ K1,  F-series = s . K3      (mask supports cancel)
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.chebyshev import eval_chebyshev, eval_power_series
+from repro.core.poly_attention import head_projections
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+class VectorPack(NamedTuple):
+    M1: Array     # (N, d, g)
+    M2: Array     # (N, d, g)
+    K1: Array     # (N, g, d)
+    K3: Array     # (N, g)
+    mask4: Array  # (N, g)  — this IS K2 in the appendix's notation
+
+
+def precompute_vector_pack(
+    key: Array, h: Array, nbr_idx: Array, nbr_mask: Array
+) -> VectorPack:
+    n, b = nbr_mask.shape
+    d = h.shape[1]
+    g = 2 * b
+    valid = nbr_mask.astype(h.dtype)                     # (N, B)
+
+    # u_j = e_{2j} for valid slots: "sum_j u_j" is the even-slot indicator.
+    sum_u = jnp.zeros((n, g), h.dtype).at[:, 0::2].set(valid)      # (N, g)
+    mask4 = sum_u                                                   # (N, g)
+
+    h_nb = h[nbr_idx] * valid[..., None]                            # (N, B, d)
+
+    k1m, k2m, k3m, k5m = jax.random.split(key, 4)
+    odd = jnp.zeros((n, g), h.dtype).at[:, 1::2].set(1.0)
+
+    mask1 = jax.random.normal(k1m, (n, d, g), h.dtype) * odd[:, None, :]
+    mask2 = jax.random.normal(k2m, (n, d, g), h.dtype) * odd[:, None, :]
+    mask3 = jax.random.normal(k3m, (n, g, d), h.dtype) * odd[..., None]
+    mask5 = jax.random.normal(k5m, (n, g), h.dtype) * odd
+
+    # sum_j h_j u_j^T : scatter neighbour features onto even slots.
+    outer_h_u = jnp.zeros((n, d, g), h.dtype).at[:, :, 0::2].set(
+        jnp.transpose(h_nb, (0, 2, 1))
+    )
+    M1 = mask1 + h[:, :, None] * sum_u[:, None, :]                  # (N, d, g)
+    M2 = mask2 + outer_h_u
+    K1 = mask3 + jnp.transpose(outer_h_u, (0, 2, 1))                # (N, g, d)
+    K3 = mask5 + sum_u
+    return VectorPack(M1=M1, M2=M2, K1=K1, K3=K3, mask4=mask4)
+
+
+def vector_series(
+    pack: VectorPack,
+    h: Array,
+    b1: Array,
+    b2: Array,
+    coeffs: Array,
+    *,
+    basis: str = "power",
+    domain: Tuple[float, float] = (-4.0, 4.0),
+) -> Tuple[Array, Array]:
+    """Returns (S_E: (H, N, d), S_F: (H, N)) — series-weighted moments."""
+    D = jnp.einsum("hd,ndg->hng", b1, pack.M1) + jnp.einsum(
+        "hd,ndg->hng", b2, pack.M2
+    )
+    R = D * pack.mask4[None]                                        # (H, N, g)
+    if basis == "power":
+        s = eval_power_series(jnp.asarray(coeffs, R.dtype), R)
+    elif basis == "chebyshev":
+        s = eval_chebyshev(jnp.asarray(coeffs, R.dtype), R, domain)
+    else:
+        raise ValueError(f"unknown basis {basis!r}")
+    s = s * pack.mask4[None]                # n=0 term only on valid slots
+    SE = jnp.einsum("hng,ngd->hnd", s, pack.K1)
+    SF = jnp.einsum("hng,ng->hn", s, pack.K3)
+    return SE, SF
+
+
+def fedgat_layer_vector(
+    params: Params,
+    pack: VectorPack,
+    h: Array,
+    coeffs: Array,
+    *,
+    basis: str = "power",
+    domain: Tuple[float, float] = (-4.0, 4.0),
+    concat: bool = True,
+) -> Array:
+    """Approximate first-layer GAT update, Vector FedGAT engine."""
+    b1, b2 = head_projections(params)
+    SE, SF = vector_series(pack, h, b1, b2, coeffs, basis=basis, domain=domain)
+    agg = SE / SF[..., None]
+    out = jnp.einsum("hnd,hdo->hno", agg, params["W"])
+    if concat:
+        return jnp.transpose(out, (1, 0, 2)).reshape(h.shape[0], -1)
+    return out.mean(axis=0)

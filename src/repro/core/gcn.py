@@ -1,0 +1,43 @@
+"""Graph Convolutional Network baseline (Kipf & Welling 2017).
+
+Centralised-GCN is a baseline row in the paper's Table 1 and FedGCN (the
+federated counterpart, Yao et al. 2023) is the closest prior method; both
+are implemented here so the benchmark harness can reproduce the comparison.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+def normalized_adjacency(adj: np.ndarray) -> np.ndarray:
+    """D^{-1/2} (A + I already folded) D^{-1/2}, dense float32."""
+    a = adj.astype(np.float32)
+    deg = a.sum(axis=1)
+    d_inv_sqrt = 1.0 / np.sqrt(np.maximum(deg, 1.0))
+    return a * d_inv_sqrt[:, None] * d_inv_sqrt[None, :]
+
+
+def init_gcn_params(key: Array, d_in: int, hidden: int, num_classes: int) -> List[Params]:
+    k1, k2 = jax.random.split(key)
+    lim1 = jnp.sqrt(6.0 / (d_in + hidden))
+    lim2 = jnp.sqrt(6.0 / (hidden + num_classes))
+    return [
+        {"W": jax.random.uniform(k1, (d_in, hidden), minval=-lim1, maxval=lim1)},
+        {"W": jax.random.uniform(k2, (hidden, num_classes), minval=-lim2, maxval=lim2)},
+    ]
+
+
+def gcn_forward(params: Sequence[Params], h: Array, a_norm: Array) -> Array:
+    x = h
+    for li, p in enumerate(params):
+        x = a_norm @ (x @ p["W"])
+        if li < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x

@@ -1,0 +1,3 @@
+from repro.data.pipeline import TokenStream, make_lm_batches
+
+__all__ = ["TokenStream", "make_lm_batches"]

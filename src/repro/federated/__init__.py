@@ -1,0 +1,27 @@
+from repro.federated.aggregation import fedavg, fedadam_server, fedprox_grad
+from repro.federated.comm import CommReport, matrix_comm_cost, vector_comm_cost
+from repro.federated.partition import (
+    Partition,
+    client_neighbor_masks,
+    cross_client_edge_count,
+    dirichlet_partition,
+    l_hop_sizes,
+)
+from repro.federated.trainer import FederatedConfig, run_federated, train_centralized
+
+__all__ = [
+    "fedavg",
+    "fedadam_server",
+    "fedprox_grad",
+    "CommReport",
+    "matrix_comm_cost",
+    "vector_comm_cost",
+    "Partition",
+    "client_neighbor_masks",
+    "cross_client_edge_count",
+    "dirichlet_partition",
+    "l_hop_sizes",
+    "FederatedConfig",
+    "run_federated",
+    "train_centralized",
+]

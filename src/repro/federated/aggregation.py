@@ -1,0 +1,62 @@
+"""Parameter aggregation schemes (paper §4 "Model Training and Parameter
+Aggregation": FedAvg by default; FedProx and server-side adaptive (FedAdam)
+also supported, as the paper notes any FL aggregator may be plugged in).
+
+All operate on *stacked* client pytrees: every leaf has a leading client
+axis K (the layout produced by vmap/shard_map local training).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamState
+
+PyTree = Any
+
+
+def fedavg(stacked_params: PyTree, weights: jax.Array | None = None) -> PyTree:
+    """Weighted mean over the leading client axis (McMahan et al. 2017)."""
+    if weights is None:
+        return jax.tree.map(lambda p: jnp.mean(p, axis=0), stacked_params)
+    w = weights / jnp.sum(weights)
+
+    def leaf(p):
+        return jnp.tensordot(w.astype(p.dtype), p, axes=(0, 0))
+
+    return jax.tree.map(leaf, stacked_params)
+
+
+def fedprox_grad(local_params: PyTree, global_params: PyTree, grads: PyTree, mu: float) -> PyTree:
+    """FedProx (Li et al. 2020): add mu * (W_k - W_global) to local grads."""
+    return jax.tree.map(lambda g, p, gp: g + mu * (p - gp), grads, local_params, global_params)
+
+
+def fedadam_server(
+    global_params: PyTree,
+    stacked_params: PyTree,
+    opt_state: AdamState,
+    server_lr: float = 0.05,
+    b1: float = 0.9,
+    b2: float = 0.99,
+    eps: float = 1e-6,
+    weights: jax.Array | None = None,
+) -> Tuple[PyTree, AdamState]:
+    """FedAdam (Reddi et al. 2020): Adam on the pseudo-gradient
+    Delta = W_global - mean_k(W_k)."""
+    mean = fedavg(stacked_params, weights=weights)
+    delta = jax.tree.map(lambda gp, m: gp - m, global_params, mean)
+    step = opt_state.step + 1
+    t = step.astype(jnp.float32)
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, opt_state.mu, delta)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, opt_state.nu, delta)
+
+    def upd(p, m, v):
+        mhat = m / (1 - b1 ** t)
+        vhat = v / (1 - b2 ** t)
+        return p - server_lr * mhat / (jnp.sqrt(vhat) + eps)
+
+    new_params = jax.tree.map(upd, global_params, mu, nu)
+    return new_params, AdamState(step=step, mu=mu, nu=nu)

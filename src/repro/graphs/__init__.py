@@ -1,0 +1,10 @@
+from repro.graphs.graph import Graph, build_neighbor_lists, pad_degree
+from repro.graphs.synthetic import make_cora_like, DATASET_PRESETS
+
+__all__ = [
+    "Graph",
+    "build_neighbor_lists",
+    "pad_degree",
+    "make_cora_like",
+    "DATASET_PRESETS",
+]

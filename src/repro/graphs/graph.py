@@ -1,0 +1,108 @@
+"""Graph container used across the FedGAT stack.
+
+Two redundant encodings are carried:
+
+* dense adjacency mask ``adj`` (N, N)   — reference GAT / GCN paths;
+* padded neighbour lists ``nbr_idx``/``nbr_mask`` (N, B) — the FedGAT
+  moment machinery and the Pallas kernel (MXU-friendly, no ragged loops).
+
+``B`` is the padded max degree. Self-loops are included in neighbourhoods
+(standard for GAT node classification).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import numpy as np
+
+
+class Graph(NamedTuple):
+    features: np.ndarray      # (N, d) float32
+    labels: np.ndarray        # (N,)   int32
+    adj: np.ndarray           # (N, N) bool, symmetric, with self-loops
+    nbr_idx: np.ndarray       # (N, B) int32, padded with 0
+    nbr_mask: np.ndarray      # (N, B) bool
+    train_mask: np.ndarray    # (N,) bool
+    val_mask: np.ndarray      # (N,) bool
+    test_mask: np.ndarray     # (N,) bool
+    num_classes: int
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.features.shape[0])
+
+    @property
+    def feature_dim(self) -> int:
+        return int(self.features.shape[1])
+
+    @property
+    def max_degree(self) -> int:
+        return int(self.nbr_idx.shape[1])
+
+
+def pad_degree(deg: int, multiple: int = 8) -> int:
+    """Pad max degree up to a multiple (VMEM/MXU friendliness)."""
+    return int(-(-deg // multiple) * multiple)
+
+
+def build_neighbor_lists(
+    adj: np.ndarray, pad_multiple: int = 8, max_degree: Optional[int] = None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Dense adjacency (with self-loops) -> padded (nbr_idx, nbr_mask)."""
+    n = adj.shape[0]
+    degs = adj.sum(axis=1).astype(np.int64)
+    B = int(degs.max()) if max_degree is None else int(max_degree)
+    B = pad_degree(max(B, 1), pad_multiple)
+    nbr_idx = np.zeros((n, B), dtype=np.int32)
+    nbr_mask = np.zeros((n, B), dtype=bool)
+    for i in range(n):
+        js = np.nonzero(adj[i])[0][:B]
+        nbr_idx[i, : len(js)] = js
+        nbr_mask[i, : len(js)] = True
+    return nbr_idx, nbr_mask
+
+
+def make_graph(
+    features: np.ndarray,
+    labels: np.ndarray,
+    adj: np.ndarray,
+    train_mask: np.ndarray,
+    val_mask: np.ndarray,
+    test_mask: np.ndarray,
+    num_classes: int,
+    pad_multiple: int = 8,
+) -> Graph:
+    adj = adj.astype(bool).copy()
+    np.fill_diagonal(adj, True)  # self-loops
+    adj = adj | adj.T
+    nbr_idx, nbr_mask = build_neighbor_lists(adj, pad_multiple)
+    return Graph(
+        features=features.astype(np.float32),
+        labels=labels.astype(np.int32),
+        adj=adj,
+        nbr_idx=nbr_idx,
+        nbr_mask=nbr_mask,
+        train_mask=train_mask.astype(bool),
+        val_mask=val_mask.astype(bool),
+        test_mask=test_mask.astype(bool),
+        num_classes=int(num_classes),
+    )
+
+
+def subgraph(g: Graph, nodes: Sequence[int], pad_multiple: int = 8) -> Graph:
+    """Induced subgraph over ``nodes`` (cross-boundary edges dropped).
+
+    Used by the DistGAT baseline, which drops cross-client edges.
+    """
+    nodes = np.asarray(sorted(nodes), dtype=np.int64)
+    adj = g.adj[np.ix_(nodes, nodes)]
+    return make_graph(
+        g.features[nodes],
+        g.labels[nodes],
+        adj,
+        g.train_mask[nodes],
+        g.val_mask[nodes],
+        g.test_mask[nodes],
+        g.num_classes,
+        pad_multiple,
+    )

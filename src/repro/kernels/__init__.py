@@ -1,0 +1,5 @@
+from repro.kernels import ops, ref
+from repro.kernels.cheb_attn import cheb_attn
+from repro.kernels.flash_attn import flash_attn
+from repro.kernels.poly_attn import poly_attn
+from repro.kernels.wkv_chunk import wkv_chunked

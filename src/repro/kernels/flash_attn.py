@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: blockwise causal flash attention (online softmax).
+
+Used by the transformer zoo's dense archs. Canonical 3-D grid
+(batch*heads, q_blocks, k_blocks) with VMEM scratch carrying the running
+max m, normaliser l, and output accumulator across k blocks; causally
+fully-masked k blocks are skipped.
+
+VMEM budget per step: q (BQ, hd) + k/v (BK, hd) + acc (BQ, hd) + scores
+(BQ, BK); with BQ=BK=128, hd<=256 this is well under a v5e core's ~16 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale, causal, block_q, block_k
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causally fully-masked block? (first row of q block < first col of k block)
+    run = (ki * block_k <= qi * block_q + block_q - 1) if causal else True
+
+    @pl.when(jnp.asarray(run))
+    def _body():
+        q = q_ref[0].astype(jnp.float32)            # (BQ, hd)
+        k = k_ref[0].astype(jnp.float32)            # (BK, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                    # (BQ, BK)
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]                          # (BQ, 1)
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _final():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attn(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> Array:
+    """q/k/v: (B, H, S, hd) -> (B, H, S, hd). MHA layout (equal head counts).
+
+    interpret=True validates on CPU; on TPU pass interpret=False.
+    """
+    Bt, H, S, hd = q.shape
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    if S % bq or S % bk:
+        raise ValueError(f"S={S} must divide block sizes ({bq},{bk})")
+    scale = hd**-0.5
+    qf = q.reshape(Bt * H, S, hd)
+    kf = k.reshape(Bt * H, S, hd)
+    vf = v.reshape(Bt * H, S, hd)
+    grid = (Bt * H, S // bq, S // bk)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, block_q=bq, block_k=bk
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bt * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(Bt, H, S, hd)

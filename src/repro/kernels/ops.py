@@ -1,0 +1,69 @@
+"""jit'd wrappers exposing the Pallas kernels to the rest of the stack."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cheb_attn import cheb_attn
+from repro.kernels.flash_attn import flash_attn
+from repro.kernels.poly_attn import poly_attn
+from repro.kernels import ref
+
+Array = jax.Array
+
+# CPU containers run the kernels in interpret mode; flip on TPU.
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def cheb_attn_layer(
+    params: Dict,
+    coeffs: Array,
+    h: Array,
+    nbr_idx: Array,
+    nbr_mask: Array,
+    *,
+    basis: str = "power",
+    domain: Tuple[float, float] = (-4.0, 4.0),
+    concat: bool = True,
+) -> Array:
+    """FedGAT layer-1 via the fused Pallas kernel ("kernel" engine).
+
+    Pads N and d to kernel block multiples, evaluates per head, and applies
+    the output projection W — numerically the direct oracle (ref.py).
+    """
+    if basis != "power":
+        raise ValueError("kernel engine evaluates the monomial (power) basis")
+    from repro.core.poly_attention import edge_scores, head_projections
+
+    n, d = h.shape
+    b1, b2 = head_projections(params)
+    x = edge_scores(b1, b2, h, nbr_idx)                  # (H, N, B)
+    h_nb = h[nbr_idx] * nbr_mask[..., None].astype(h.dtype)  # (N, B, d)
+
+    bn = 8
+    bd = 128 if d % 128 == 0 else (8 if d % 8 == 0 else 1)
+    pad_n = (-n) % bn
+    pad_d = (-d) % bd
+    xp = jnp.pad(x, ((0, 0), (0, pad_n), (0, 0)))
+    hp = jnp.pad(h_nb, ((0, pad_n), (0, 0), (0, pad_d)))
+    mp = jnp.pad(nbr_mask, ((0, pad_n), (0, 0)))
+    # padded rows: give them one fake valid neighbour to avoid 0/0
+    if pad_n:
+        mp = mp.at[n:, 0].set(True)
+
+    outs = []
+    for hd_i in range(x.shape[0]):                        # per attention head
+        agg = cheb_attn(
+            xp[hd_i], hp, mp, jnp.asarray(coeffs, jnp.float32),
+            block_n=bn, block_d=bd, interpret=INTERPRET,
+        )[:n, :d]
+        outs.append(agg @ params["W"][hd_i])
+    out = jnp.stack(outs, axis=0)                          # (H, N, d_out)
+    if concat:
+        return jnp.transpose(out, (1, 0, 2)).reshape(n, -1)
+    return out.mean(axis=0)
+
+
+__all__ = ["cheb_attn", "flash_attn", "poly_attn", "cheb_attn_layer", "ref", "INTERPRET"]

@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def cheb_attn_ref(x: Array, h_nb: Array, mask: Array, coeffs: Array) -> Array:
+    """Fused polynomial-attention graph aggregation (FedGAT Eq. 7).
+
+    x: (N, B) per-edge scores; h_nb: (N, B, D) neighbour features;
+    mask: (N, B); coeffs: (p+1,) monomial coefficients.
+    Returns (N, D): sum_j e_ij h_j / sum_j e_ij with e = sum_n q_n x^n.
+    """
+    e = jnp.zeros_like(x)
+    for qn in coeffs[::-1]:
+        e = e * x + qn                          # Horner
+    e = e * mask.astype(x.dtype)
+    num = jnp.einsum("nb,nbd->nd", e, h_nb)
+    den = jnp.sum(e, axis=-1, keepdims=True)
+    return num / den
+
+
+def flash_attn_ref(
+    q: Array, k: Array, v: Array, *, causal: bool = True, scale: float | None = None
+) -> Array:
+    """Plain softmax attention. q/k/v: (B, H, S, hd) -> (B, H, S, hd)."""
+    hd = q.shape[-1]
+    scale = scale or hd**-0.5
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        S = q.shape[2]
+        msk = jnp.tril(jnp.ones((S, S), bool))
+        scores = jnp.where(msk[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def wkv_ref(r: Array, k: Array, v: Array, w: Array, u: Array, S0: Array) -> Tuple[Array, Array]:
+    """RWKV6 wkv recurrence oracle (sequential scan).
+
+    r/k/v/w: (BH, S, hd); u: (hd,); S0: (BH, hd, hd) f32.
+      y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+      S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Returns (y: (BH, S, hd) f32, S_final).
+    """
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    wf = w.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    def step(S, t):
+        r_t, k_t, v_t, w_t = t
+        kv = jnp.einsum("bk,bv->bkv", k_t, v_t)
+        y = jnp.einsum("bk,bkv->bv", r_t, S + uf[None, :, None] * kv)
+        return w_t[..., None] * S + kv, y
+
+    xs = tuple(jnp.swapaxes(a, 0, 1) for a in (rf, kf, vf, wf))
+    S, ys = jax.lax.scan(step, S0.astype(jnp.float32), xs)
+    return jnp.swapaxes(ys, 0, 1), S
+
+
+def poly_attn_ref(
+    q: Array, k: Array, a1: Array, a2: Array, v: Array, coeffs: Array,
+    *, causal: bool = True, domain: float = 4.0,
+) -> Array:
+    """FedGAT-style additive polynomial attention for transformers.
+
+    q/k/v: (B, H, S, hd); a1/a2: (H, hd). Scores x_ij = a1.q_i + a2.k_j,
+    weights = series(x) / sum series(x) over the allowed positions.
+    """
+    sq = jnp.einsum("bhqd,hd->bhq", q.astype(jnp.float32), a1.astype(jnp.float32))
+    sk = jnp.einsum("bhkd,hd->bhk", k.astype(jnp.float32), a2.astype(jnp.float32))
+    x = jnp.clip(sq[..., :, None] + sk[..., None, :], -domain, domain)
+    e = jnp.zeros_like(x)
+    for qn in coeffs[::-1]:
+        e = e * x + qn
+    if causal:
+        S = q.shape[2]
+        msk = jnp.tril(jnp.ones((S, S), bool))
+        e = e * msk[None, None]
+    num = jnp.einsum("bhqk,bhkd->bhqd", e, v.astype(jnp.float32))
+    den = jnp.sum(e, axis=-1, keepdims=True)
+    return (num / jnp.maximum(den, 1e-9)).astype(q.dtype)

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: chunked RWKV6 wkv with data-dependent decay.
+
+The naive recurrence serialises over S timesteps of tiny VPU work. This
+kernel processes CHUNKS of C tokens with MXU matmuls, carrying the
+(hd x hd) state in VMEM scratch across the sequential chunk grid dimension
+— the TPU-native adaptation of chunked linear attention to Finch's
+per-channel data-dependent decay (DESIGN.md §3):
+
+  within a chunk, with P_t = prod_{u<=t} w_u (cumulative per-channel decay),
+    S_t   = diag(P_t) (S_0 + sum_{s<=t} diag(1/P_s) k_s v_s^T)
+    y_t   = a_t^T S_0 + sum_{s<t} (a_t . k~_s) v_s + ((r_t*u) . k_t) v_t
+  where a_t = r_t * P_{t-1},  k~_s = k_s / P_s, so the chunk computes as
+    y = (tril(a k~^T, -1) + diag((r*u . k))) @ v  +  a @ S_0      (MXU)
+    S_C = diag(P_C) S_0 + ((P_C / P_s) * k_s)^T @ v               (MXU)
+
+Chunk size (default 16) bounds the 1/P_s dynamic range (w in (0,1)); all
+chunk math runs in f32. Serial chain length drops S -> S/C.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sN_ref, S_scr, *, chunk):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        S_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)          # (C, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)          # (C, hd) in (0, 1)
+    u = u_ref[...].astype(jnp.float32)        # (hd,)
+    S0 = S_scr[...]                           # (hd, hd)
+
+    P = jnp.cumprod(w, axis=0)                # (C, hd)
+    P_prev = jnp.concatenate([jnp.ones_like(P[:1]), P[:-1]], axis=0)
+    a = r * P_prev                            # (C, hd)
+    kt = k / jnp.maximum(P, 1e-24)            # k~_s
+
+    scores = jax.lax.dot_general(
+        a, kt, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                          # (C, C): a_t . k~_s
+    rows = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    diag = jnp.sum(r * u[None, :] * k, axis=-1)          # bonus term
+    M = jnp.where(rows > cols, scores, 0.0)
+    M = M + jnp.where(rows == cols, diag[:, None], 0.0)
+
+    y = jax.lax.dot_general(
+        M, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ) + jax.lax.dot_general(
+        a, S0, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update: S_C = diag(P_C) S_0 + ((P_C / P_s) * k_s)^T @ v
+    b = (P[-1][None, :] / jnp.maximum(P, 1e-24)) * k      # (C, hd)
+    S_new = P[-1][:, None] * S0 + jax.lax.dot_general(
+        b, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    S_scr[...] = S_new
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        sN_ref[0] = S_new.astype(sN_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_chunked(
+    r: Array, k: Array, v: Array, w: Array, u: Array, S0: Array,
+    *, chunk: int = 16, interpret: bool = True,
+):
+    """r/k/v/w: (BH, S, hd); u: (hd,); S0: (BH, hd, hd).
+
+    Returns (y: (BH, S, hd) f32, S_final: (BH, hd, hd) f32).
+    """
+    BH, S, hd = r.shape
+    c = min(chunk, S)
+    if S % c:
+        raise ValueError(f"S={S} must be a multiple of chunk={c}")
+    grid = (BH, S // c)
+    y, sN = pl.pallas_call(
+        functools.partial(_wkv_kernel, chunk=c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, c, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, c, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, c, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((hd,), lambda b, i: (0,)),
+            pl.BlockSpec((1, hd, hd), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, hd, hd), lambda b, i: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, hd), jnp.float32),
+            jax.ShapeDtypeStruct((BH, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, S0)
+    return y, sN

@@ -1,0 +1,157 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+
+"""Multi-pod dry-run: prove every (arch x input-shape x mesh) lowers and
+compiles on the production meshes, and extract the roofline inputs.
+
+MUST set XLA_FLAGS before any jax import (device count locks on first
+backend init) — hence the module's first two lines.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all [--multi-pod]
+  python -m repro.launch.dryrun ... --out benchmarks/results/dryrun
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.analysis.hlo import (
+    active_params,
+    model_flops,
+    model_traffic,
+    parse_collectives,
+    roofline_terms,
+    total_params,
+)
+from repro.analysis.hlo_graph import analyze_hlo
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_sharded_step
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, save_hlo: str | None = None,
+            strategy: str = "megatron") -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "chips": chips,
+        "kind": shape.kind,
+        "strategy": strategy,
+        "status": "ok",
+    }
+    t0 = time.time()
+    try:
+        fn, args, in_sh, out_sh = build_sharded_step(cfg, shape, mesh, strategy=strategy)
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = jitted.lower(*args)
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 2)
+
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: int(getattr(ma, k))
+                for k in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                )
+                if hasattr(ma, k)
+            }
+        except Exception as e:  # CPU backend may not implement it
+            rec["memory_analysis"] = {"error": str(e)}
+
+        try:
+            ca = compiled.cost_analysis()
+            rec["cost_analysis"] = {
+                "flops": float(ca.get("flops", -1.0)),
+                "bytes_accessed": float(ca.get("bytes accessed", -1.0)),
+                "transcendentals": float(ca.get("transcendentals", -1.0)),
+            }
+        except Exception as e:
+            rec["cost_analysis"] = {"error": str(e)}
+
+        hlo = compiled.as_text()
+        rec["hlo_bytes"] = len(hlo)
+        if save_hlo:
+            pathlib.Path(save_hlo).write_text(hlo)
+
+        # Trip-count-aware per-device totals (XLA's HloCostAnalysis counts
+        # while bodies once; analyze_hlo corrects by loop trip counts).
+        cost = analyze_hlo(hlo)
+        rec["hlo_cost"] = cost.to_dict()
+        mt = model_traffic(cfg, shape)
+        rec["model_traffic_global"] = mt
+        # terms are per-chip: the compiled module IS the per-device program;
+        # memory term uses the analytic TPU-fusion traffic model (HLO
+        # fusion-boundary traffic kept as the pessimistic upper bound).
+        rec["roofline"] = roofline_terms(
+            cost.flops, mt / chips, cost.collective_bytes, chips=1
+        )
+        rec["roofline"]["memory_s_hlo_upper"] = cost.traffic_bytes / 819e9
+        mf = model_flops(cfg, shape, include_backward=(shape.kind == "train"))
+        rec["model_flops_global"] = mf
+        rec["model_flops_per_chip"] = mf / chips
+        rec["useful_flops_ratio"] = (mf / chips / cost.flops) if cost.flops > 0 else None
+        rec["active_params"] = active_params(cfg)
+        rec["total_params"] = total_params(cfg)
+    except Exception as e:
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--strategy", default="megatron", choices=["megatron", "fsdp"])
+    args = ap.parse_args()
+
+    archs = ASSIGNED_ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+            if args.strategy != "megatron":
+                mesh_tag += f"__{args.strategy}"
+            rec = run_one(arch, shape, args.multi_pod, args.save_hlo, args.strategy)
+            path = outdir / f"{arch}__{shape}__{mesh_tag}.json"
+            path.write_text(json.dumps(rec, indent=1))
+            ok = rec["status"] == "ok"
+            n_fail += 0 if ok else 1
+            rl = rec.get("roofline", {})
+            print(
+                f"[{'OK' if ok else 'FAIL'}] {arch} {shape} {mesh_tag} "
+                f"lower={rec.get('lower_s', '-')}s compile={rec.get('compile_s', '-')}s "
+                f"bottleneck={rl.get('bottleneck', '-')}"
+                + ("" if ok else f"  err={rec.get('error')}")
+            , flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Activation sharding constraints that degrade gracefully.
+
+``constrain(x, *axes)`` applies jax.lax.with_sharding_constraint with a
+PartitionSpec built from ``axes`` — but only for axis names present in the
+current mesh AND dims that divide the axis size; everything else falls back
+to None (replicated). On a mesh-less trace (CPU tests, reduced configs) it
+is a no-op, so model code can annotate unconditionally.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[str, tuple, None]
+
+
+# Mesh info captured OUTSIDE jit (get_abstract_mesh is empty under the
+# plain `with mesh:` context manager, and get_mesh is forbidden in-trace).
+# Step builders call set_active_mesh(mesh) before lowering.
+_ACTIVE: dict = {"names": (), "shape": {}, "mesh": None}
+
+
+def set_active_mesh(mesh) -> None:
+    if mesh is None:
+        _ACTIVE["names"], _ACTIVE["shape"], _ACTIVE["mesh"] = (), {}, None
+    else:
+        _ACTIVE["names"] = tuple(mesh.axis_names)
+        _ACTIVE["shape"] = dict(mesh.shape)
+        _ACTIVE["mesh"] = mesh
+
+
+def active_mesh():
+    """The concrete mesh set by the step builder (None on CPU tests)."""
+    return _ACTIVE["mesh"]
+
+
+def _mesh():
+    if not _ACTIVE["names"]:
+        return None
+    return _ACTIVE
+
+
+def _axis_size(mesh, name) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([mesh["shape"][n] for n in name]))
+    return int(mesh["shape"][name])
+
+
+def constrain(x: jax.Array, *axes: Axis) -> jax.Array:
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    names = set(mesh["names"])
+    fitted = []
+    for dim, ax in zip(x.shape, axes):
+        if ax is None:
+            fitted.append(None)
+            continue
+        wanted = ax if isinstance(ax, tuple) else (ax,)
+        present = tuple(a for a in wanted if a in names)
+        if not present:
+            fitted.append(None)
+            continue
+        present = present if len(present) > 1 else present[0]
+        if dim % _axis_size(mesh, present) == 0:
+            fitted.append(present)
+        else:
+            fitted.append(None)
+    fitted += [None] * (x.ndim - len(fitted))
+    return jax.lax.with_sharding_constraint(x, P(*fitted))
+
+
+DATA = ("pod", "data")
+MODEL = "model"

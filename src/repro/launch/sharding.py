@@ -1,0 +1,259 @@
+"""Logical sharding rules: parameter/batch/cache PartitionSpecs per arch.
+
+2D/3D parallelism: batch on ("pod", "data"), tensor/expert/vocab on
+"model". Rules are path-based over the parameter pytree; any dimension
+that does not divide its mesh axis falls back to replication (hymba's 25
+heads, paligemma's 8 heads — noted in DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return int(mesh.shape[name])
+
+
+def _fit(mesh: Mesh, dim: int, axis) -> Any:
+    """axis if dim divides the mesh axis size, else None (replicate)."""
+    return axis if dim % _axis_size(mesh, axis) == 0 else None
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _param_spec(mesh: Mesh, path: str, shape: Tuple[int, ...]) -> P:
+    """PartitionSpec for one parameter leaf (trailing dims; any leading
+    layer-stack axis is replicated)."""
+    def spec(*trailing):
+        lead = (None,) * (len(shape) - len(trailing))
+        fitted = []
+        for dim, ax in zip(shape[len(lead):], trailing):
+            fitted.append(_fit(mesh, dim, ax) if ax else None)
+        return P(*(lead + tuple(fitted)))
+
+    mdl = "model"
+    # --- embeddings: shard the vocab dimension ---
+    if "embed" in path or "head" in path:
+        return spec(mdl, None)
+    # --- attention ---
+    if any(f"{n}/" in path or path.endswith(n) for n in ("wq", "wk", "wv")):
+        if path.endswith("/b"):
+            return spec(mdl)
+        return spec(None, mdl)
+    if "wo" in path:
+        if path.endswith("/b"):
+            return spec(None)
+        return spec(mdl, None)
+    if path.endswith("a1") or path.endswith("a2"):
+        return spec(None, None)
+    # --- MoE: expert-parallel over "model" ---
+    if "experts" in path:
+        if "w_down" in path:
+            return spec(mdl, None, None) if _fit(mesh, shape[-3], mdl) else spec(None, mdl, None)
+        return spec(mdl, None, None) if _fit(mesh, shape[-3], mdl) else spec(None, None, mdl)
+    if "router" in path:
+        return spec(None, None)
+    # --- dense MLP ---
+    if "w_gate" in path or "w_up" in path:
+        return spec(None, mdl)
+    if "w_down" in path:
+        return spec(mdl, None)
+    # --- rwkv time mix ---
+    if any(k in path for k in ("wr/", "wg/")) or path.endswith("wr/w") or path.endswith("wg/w"):
+        return spec(None, mdl)
+    if "cm_k" in path:
+        return spec(None, mdl)
+    if "cm_v" in path:
+        return spec(mdl, None)
+    if "cm_r" in path:
+        return spec(None, None)
+    if path.endswith("/u") or "w0" in path:
+        return spec(mdl)
+    if "wa/" in path:
+        return spec(None, None)
+    if "wb/" in path:
+        return spec(None, mdl)
+    # --- mamba ---
+    if "in_proj" in path:
+        return spec(None, mdl)
+    if "conv_w" in path:
+        return spec(None, mdl)
+    if "conv_b" in path or "dt_bias" in path or path.endswith("/D"):
+        return spec(mdl)
+    if "w_dt" in path:
+        return spec(None, mdl)
+    if "w_B" in path or "w_C" in path or "A_log" in path:
+        return spec(mdl, None)
+    if "out_proj" in path:
+        return spec(mdl, None)
+    # --- norms, mixes, scalars ---
+    return P(*([None] * len(shape)))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_shardings(mesh: Mesh, params_shape: Any) -> Any:
+    """NamedSharding pytree matching an eval_shape'd parameter tree."""
+
+    def leaf(path, x):
+        return NamedSharding(mesh, _param_spec(mesh, _path_str(path), x.shape))
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shape)
+
+
+def opt_shardings_zero1(mesh: Mesh, params_shape: Any) -> Any:
+    """ZeRO-1: optimizer moments take the megatron param layout EXTENDED by
+    the data axes on the model-sharded dim (or the largest dim when the
+    param is replicated) — the f32 Adam state, 4x the bf16 params, stops
+    being replicated across data shards."""
+    dp = batch_axes(mesh)
+
+    def leaf(path, x):
+        base = _param_spec(mesh, _path_str(path), x.shape)
+        spec = list(base) + [None] * (x.ndim - len(base))
+        # extend the model-sharded dim with the data axes if divisible
+        for i, (dim, ax) in enumerate(zip(x.shape, spec)):
+            if ax == "model":
+                joint = ("model",) + dp
+                if dim % _axis_size(mesh, joint) == 0:
+                    spec[i] = joint
+                return NamedSharding(mesh, P(*spec))
+        # replicated param: shard its largest divisible dim over data
+        order = sorted(range(x.ndim), key=lambda i: -x.shape[i])
+        for i in order:
+            if spec[i] is None and x.shape[i] % _axis_size(mesh, dp) == 0 and x.shape[i] > 1:
+                spec[i] = dp
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shape)
+
+
+def param_shardings_fsdp(mesh: Mesh, params_shape: Any) -> Any:
+    """ZeRO-3/FSDP layout: every parameter sharded along its largest
+    divisible dim over ALL mesh axes combined; XLA inserts the per-layer
+    all-gather (fwd/bwd) + grad reduce-scatter. Wins over megatron-TP when
+    params-per-layer bytes < activation-psum bytes (small models, big
+    batches) — see EXPERIMENTS.md §Perf yi-6b iterations."""
+    axes = tuple(mesh.axis_names)
+
+    def leaf(path, x):
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        dims = list(x.shape)
+        # try dims from largest, skip leading layer-stack axis only if
+        # another dim fits
+        order = sorted(range(x.ndim), key=lambda i: -dims[i])
+        for i in order:
+            if dims[i] % _axis_size(mesh, axes) == 0:
+                spec = [None] * x.ndim
+                spec[i] = axes
+                return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P(*([None] * x.ndim)))
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shape)
+
+
+def batch_spec_fsdp(mesh: Mesh, shape: Tuple[int, ...]) -> P:
+    """Batch sharded over every mesh axis (pure data parallel)."""
+    axes = tuple(mesh.axis_names)
+    b = _fit(mesh, shape[0], axes)
+    return P(*((b,) + (None,) * (len(shape) - 1)))
+
+
+def batch_spec(mesh: Mesh, shape: Tuple[int, ...]) -> P:
+    """Token/label/prefix/frame arrays: batch on ("pod","data")."""
+    dp = batch_axes(mesh)
+    b = _fit(mesh, shape[0], dp)
+    return P(*((b,) + (None,) * (len(shape) - 1)))
+
+
+def batch_shardings(mesh: Mesh, batch_shape: Any) -> Any:
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, batch_spec(mesh, x.shape)), batch_shape
+    )
+
+
+def cache_shardings(mesh: Mesh, cfg: ArchConfig, cache_shape: Any) -> Any:
+    """Decode caches (structure-aware). Batch-shard when divisible;
+    otherwise shard the KV window over "data" (context parallelism for the
+    global_batch=1 long-decode shape). KV heads / state channels go on
+    "model" when divisible."""
+    from repro.models.attention import KVCache
+    from repro.models.hybrid import MambaState
+    from repro.models.rwkv import RWKVState
+    from repro.models.transformer import DecodeCache
+    from repro.models.encdec import EncDecCache
+
+    dp = batch_axes(mesh)
+    mdl = "model"
+
+    def ns(*spec):
+        return NamedSharding(mesh, P(*spec))
+
+    def kv_cache(c: KVCache):
+        # (L, B, W, KV, hd)
+        b = _fit(mesh, c.k.shape[1], dp)
+        w = None if b else _fit(mesh, c.k.shape[2], "data")
+        kvh = _fit(mesh, c.k.shape[3], mdl)
+        return KVCache(
+            k=ns(None, b, w, kvh, None),
+            v=ns(None, b, w, kvh, None),
+            pos=ns(None, b, w),
+        )
+
+    def rwkv_state(s: RWKVState):
+        b = _fit(mesh, s.S.shape[1], dp)
+        h = _fit(mesh, s.S.shape[2], mdl)
+        d = _fit(mesh, s.x_prev_tm.shape[2], mdl) if not b else None
+        return RWKVState(
+            x_prev_tm=ns(None, b, d),
+            x_prev_cm=ns(None, b, d),
+            S=ns(None, b, h, None, None),
+        )
+
+    def mamba_state(s: MambaState):
+        b = _fit(mesh, s.h.shape[1], dp)
+        di = _fit(mesh, s.h.shape[2], mdl)
+        return MambaState(conv=ns(None, b, None, di), h=ns(None, b, di, None))
+
+    def ssm(s):
+        if isinstance(s, RWKVState):
+            return rwkv_state(s)
+        if isinstance(s, MambaState):
+            return mamba_state(s)
+        return ns()  # the literal 0 placeholder
+
+    if isinstance(cache_shape, EncDecCache):
+        return EncDecCache(
+            self_kv=kv_cache(cache_shape.self_kv),
+            cross_kv=kv_cache(cache_shape.cross_kv),
+            pos=ns(),
+        )
+    return DecodeCache(
+        kv=kv_cache(cache_shape.kv) if isinstance(cache_shape.kv, KVCache) else ns(),
+        ssm=ssm(cache_shape.ssm),
+        pos=ns(),
+    )

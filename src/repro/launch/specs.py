@@ -1,0 +1,70 @@
+"""ShapeDtypeStruct input stand-ins per (arch x input-shape) — no allocation."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ArchConfig, InputShape
+
+SDS = jax.ShapeDtypeStruct
+
+
+def cfg_for_shape(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    """Shape-dependent config adjustment.
+
+    The dense/moe/vlm/audio archs are full-attention models; their
+    ``sliding_window`` field declares the LONG-CONTEXT VARIANT used only for
+    long_500k (DESIGN.md §4). All other shapes run them unwindowed.
+    Hybrid (hymba) keeps its native SWA everywhere; ssm has no window.
+    """
+    if cfg.family in ("hybrid", "ssm"):
+        return cfg
+    if shape.name == "long_500k":
+        return cfg
+    return dataclasses.replace(cfg, sliding_window=0)
+
+
+def _dt(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    """Model inputs for the given shape (tokens/labels/prefix/frames or
+    decode token). Cache specs are built separately (they are step state)."""
+    B, S = shape.global_batch, shape.seq_len
+    cfg = cfg_for_shape(cfg, shape)
+    if shape.kind in ("train", "prefill"):
+        specs: Dict[str, Any] = {
+            "tokens": SDS((B, S), jnp.int32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = SDS((B, S), jnp.int32)
+        if cfg.family == "vlm":
+            specs["prefix"] = SDS((B, cfg.prefix_len, cfg.d_model), _dt(cfg))
+        if cfg.is_encdec:
+            specs["frames"] = SDS((B, S // cfg.encoder_ratio, cfg.d_model), _dt(cfg))
+        return specs
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": SDS((B, 1), jnp.int32)}
+
+
+def cache_specs(cfg: ArchConfig, shape: InputShape) -> Any:
+    """eval_shape of the decode cache for this shape."""
+    from repro.models import build_model
+
+    cfg = cfg_for_shape(cfg, shape)
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    enc_len = (S // cfg.encoder_ratio) if cfg.is_encdec else 0
+    return jax.eval_shape(lambda: model.init_cache(B, S, enc_len))
+
+
+def param_specs(cfg: ArchConfig, shape: InputShape) -> Any:
+    from repro.models import build_model
+
+    cfg = cfg_for_shape(cfg, shape)
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))

@@ -1,0 +1,167 @@
+"""Step builders shared by train.py / serve.py / dryrun.py:
+train_step (loss + grad + AdamW), prefill_step, decode_step — each with the
+matching in/out sharding pytrees for a production mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.launch import sharding as shd
+from repro.launch.specs import cache_specs, cfg_for_shape, input_specs, param_specs
+from repro.models import build_model
+from repro.optim.adamw import AdamState, adam_update, clip_by_global_norm
+
+LR = 3e-4
+WD = 0.1
+
+
+def adam_init_f32(params_shape: Any) -> AdamState:
+    """Adam moments in f32 regardless of (bf16) param dtype — production
+    mixed-precision layout; built shape-only (works under eval_shape)."""
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params_shape),
+        nu=jax.tree.map(zeros, params_shape),
+    )
+
+
+def make_train_step(cfg: ArchConfig, microbatches: int = 1):
+    """loss + grad + clip + AdamW. microbatches > 1 enables gradient
+    accumulation: the batch splits along axis 0 and a lax.scan accumulates
+    grads, shrinking the live activation stash by the same factor — the
+    lever that makes narrow-model-axis meshes memory-feasible
+    (EXPERIMENTS.md §Perf yi iteration 4)."""
+    model = build_model(cfg)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+                params, batch
+            )
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc(carry, mbatch):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(model.loss, has_aux=True)(
+                    params, mbatch
+                )
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (gsum, lsum), _ = jax.lax.scan(acc, (zeros, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+        grads = clip_by_global_norm(grads, 1.0)
+        new_params, new_opt = adam_update(
+            grads, opt_state, params, LR, weight_decay=WD
+        )
+        return new_params, new_opt, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, cache_len: int):
+    model = build_model(cfg)
+
+    def prefill_step(params, batch):
+        b = dict(batch)
+        b["cache_len"] = cache_len
+        return model.prefill(params, b)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    model = build_model(cfg)
+
+    def decode_step(params, cache, token):
+        return model.decode_step(params, cache, token)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Sharded step assembly (for dryrun + real launch)
+# ---------------------------------------------------------------------------
+
+def build_sharded_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
+                       strategy: str = "megatron", microbatches: int = 1):
+    """Returns (fn, arg_specs, in_shardings, out_shardings) ready to lower.
+
+    strategy: "megatron" (batch on data axes, tensor/expert on model),
+    "zero1" (megatron + optimizer state sharded over data — ZeRO-1), or
+    "fsdp" (params sharded over all axes, batch over all axes) — the §Perf
+    resharding levers. microbatches > 1 adds gradient accumulation.
+    """
+    from repro.launch.pspec import set_active_mesh
+
+    set_active_mesh(mesh if strategy != "fsdp" else None)
+    rcfg = cfg_for_shape(cfg, shape)
+    p_specs = param_specs(cfg, shape)
+    if strategy == "fsdp":
+        p_shard = shd.param_shardings_fsdp(mesh, p_specs)
+    else:
+        p_shard = shd.param_shardings(mesh, p_specs)
+    inputs = input_specs(cfg, shape)
+    repl = NamedSharding(mesh, P())
+    if strategy == "fsdp":
+        _bs = shd.batch_spec_fsdp
+
+        def b_shardings(tree):
+            return jax.tree.map(
+                lambda x: NamedSharding(mesh, _bs(mesh, x.shape)), tree
+            )
+    else:
+        b_shardings = lambda tree: shd.batch_shardings(mesh, tree)
+
+    if shape.kind == "train":
+        fn = make_train_step(rcfg, microbatches=microbatches)
+        opt_specs = jax.eval_shape(lambda: adam_init_f32(p_specs))
+        if strategy == "fsdp":
+            opt_sh_fn = shd.param_shardings_fsdp
+        elif strategy == "zero1":
+            opt_sh_fn = shd.opt_shardings_zero1
+        else:
+            opt_sh_fn = shd.param_shardings
+        opt_shard = AdamState(
+            step=repl,
+            mu=opt_sh_fn(mesh, opt_specs.mu),
+            nu=opt_sh_fn(mesh, opt_specs.nu),
+        )
+        b_shard = b_shardings(inputs)
+        args = (p_specs, opt_specs, inputs)
+        in_sh = (p_shard, opt_shard, b_shard)
+        out_sh = (p_shard, opt_shard, repl)
+        return fn, args, in_sh, out_sh
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(rcfg, cache_len=shape.seq_len)
+        b_shard = b_shardings(inputs)
+        out_cache = jax.eval_shape(fn, p_specs, inputs)[1]
+        c_shard = shd.cache_shardings(mesh, rcfg, out_cache)
+        args = (p_specs, inputs)
+        in_sh = (p_shard, b_shard)
+        out_sh = (repl, c_shard)
+        return fn, args, in_sh, out_sh
+
+    # decode
+    fn = make_decode_step(rcfg)
+    c_specs = cache_specs(cfg, shape)
+    c_shard = shd.cache_shardings(mesh, rcfg, c_specs)
+    tok = inputs["tokens"]
+    t_shard = NamedSharding(mesh, shd.batch_spec(mesh, tok.shape))
+    args = (p_specs, c_specs, tok)
+    in_sh = (p_shard, c_shard, t_shard)
+    out_sh = (NamedSharding(mesh, shd.batch_spec(mesh, (tok.shape[0], 1, 8))), c_shard)
+    return fn, args, in_sh, out_sh

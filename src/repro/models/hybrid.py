@@ -1,0 +1,161 @@
+"""Mamba-style selective SSM + the Hymba parallel-hybrid block
+(arXiv:2411.13676): attention heads and SSM heads consume the SAME layer
+input in parallel; their (re-normalised) outputs are mean-fused.
+
+Mamba block (simplified selective SSM, faithful state recurrence):
+  in_proj -> (x, z); causal depthwise conv1d(k=4); x = silu(x)
+  dt = softplus(x W_dt + b);  B_t = x W_B;  C_t = x W_C;  A = -exp(A_log)
+  h_t = exp(dt * A) h_{t-1} + (dt * B_t) x_t        (state: (d_inner, n))
+  y_t = h_t . C_t + D * x_t;  out = out_proj(y * silu(z))
+
+Hymba's sliding-window attention (most layers in the paper) is what makes
+the hybrid family long_500k-capable together with the constant-size SSM
+state.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import KVCache, attention_decode, attention_full, init_attention
+from repro.models.layers import dense, init_dense, init_rmsnorm, rmsnorm
+
+Array = jax.Array
+
+
+class MambaState(NamedTuple):
+    conv: Array    # (B, K-1, d_inner) causal-conv history
+    h: Array       # (B, d_inner, n) SSM state
+
+
+def d_inner_of(cfg: ArchConfig) -> int:
+    return cfg.d_inner or 2 * cfg.d_model
+
+
+def init_mamba(key: Array, cfg: ArchConfig, dtype) -> Dict:
+    d, di, n = cfg.d_model, d_inner_of(cfg), cfg.ssm_state or 16
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": init_dense(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_dt": init_dense(ks[2], di, di, dtype),
+        "dt_bias": jnp.full((di,), -2.0, dtype),
+        "w_B": init_dense(ks[3], di, n, dtype),
+        "w_C": init_dense(ks[4], di, n, dtype),
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+        ).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": init_dense(ks[5], di, d, dtype),
+    }
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int, dtype) -> MambaState:
+    di, n = d_inner_of(cfg), cfg.ssm_state or 16
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+        h=jnp.zeros((batch, di, n), jnp.float32),
+    )
+
+
+def _ssm_scan(p: Dict, xc: Array, h0: Array) -> Tuple[Array, Array]:
+    """Selective scan. xc: (B, S, di) post-conv/silu. Returns (y, h_final)."""
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                     # (di, n)
+    dt = jax.nn.softplus(dense(p["w_dt"], xc).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    Bm = dense(p["w_B"], xc).astype(jnp.float32)                     # (B, S, n)
+    Cm = dense(p["w_C"], xc).astype(jnp.float32)                     # (B, S, n)
+    decay = jnp.exp(dt[..., None] * A[None, None])                   # (B,S,di,n)
+    inp = (dt * xc.astype(jnp.float32))[..., None] * Bm[..., None, :]
+
+    def step(h, t):
+        d_t, i_t, c_t = t
+        h = d_t * h + i_t
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (
+        jnp.swapaxes(decay, 0, 1),
+        jnp.swapaxes(inp, 0, 1),
+        jnp.swapaxes(Cm, 0, 1),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.swapaxes(ys, 0, 1) + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    return y, h
+
+
+def mamba_seq(p: Dict, cfg: ArchConfig, x: Array, state: MambaState) -> Tuple[Array, MambaState]:
+    """x: (B, S, d) -> (out, new_state)."""
+    di = d_inner_of(cfg)
+    xz = dense(p["in_proj"], x)
+    xs, z = xz[..., :di], xz[..., di:]
+    # causal depthwise conv with carried history
+    hist = jnp.concatenate([state.conv.astype(xs.dtype), xs], axis=1)
+    K = cfg.ssm_conv
+    conv = sum(
+        hist[:, i : i + xs.shape[1], :] * p["conv_w"][i][None, None, :] for i in range(K)
+    ) + p["conv_b"]
+    xc = jax.nn.silu(conv)
+    y, h = _ssm_scan(p, xc, state.h)
+    out = dense(p["out_proj"], (y.astype(x.dtype) * jax.nn.silu(z)))
+    new_state = MambaState(conv=hist[:, -(K - 1):, :].astype(state.conv.dtype), h=h)
+    return out, new_state
+
+
+def mamba_step(p: Dict, cfg: ArchConfig, x: Array, state: MambaState) -> Tuple[Array, MambaState]:
+    """Single-token decode. x: (B, 1, d)."""
+    out, state = mamba_seq(p, cfg, x, state)
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# Hymba parallel-hybrid block
+# ---------------------------------------------------------------------------
+
+def init_hymba_block(key: Array, cfg: ArchConfig, dtype) -> Dict:
+    ka, km = jax.random.split(key)
+    return {
+        "attn": init_attention(ka, cfg, dtype),
+        "mamba": init_mamba(km, cfg, dtype),
+        "norm_attn": init_rmsnorm(cfg.d_model, dtype),
+        "norm_ssm": init_rmsnorm(cfg.d_model, dtype),
+    }
+
+
+def hymba_block_seq(
+    p: Dict,
+    cfg: ArchConfig,
+    x: Array,
+    positions: Array,
+    state: MambaState,
+    coeffs: Optional[Array],
+) -> Tuple[Array, Array, Array, MambaState]:
+    """Parallel attn + SSM over the sequence. Returns (out, k, v, state)."""
+    attn_out, (k, v) = attention_full(p["attn"], cfg, x, positions, coeffs=coeffs)
+    ssm_out, state = mamba_seq(p["mamba"], cfg, x, state)
+    out = 0.5 * (
+        rmsnorm(p["norm_attn"], attn_out, cfg.norm_eps)
+        + rmsnorm(p["norm_ssm"], ssm_out, cfg.norm_eps)
+    )
+    return out, k, v, state
+
+
+def hymba_block_step(
+    p: Dict,
+    cfg: ArchConfig,
+    x: Array,
+    pos: Array,
+    kv: KVCache,
+    state: MambaState,
+    coeffs: Optional[Array],
+) -> Tuple[Array, KVCache, MambaState]:
+    attn_out, kv = attention_decode(p["attn"], cfg, x, pos, kv, coeffs=coeffs)
+    ssm_out, state = mamba_step(p["mamba"], cfg, x, state)
+    out = 0.5 * (
+        rmsnorm(p["norm_attn"], attn_out, cfg.norm_eps)
+        + rmsnorm(p["norm_ssm"], ssm_out, cfg.norm_eps)
+    )
+    return out, kv, state

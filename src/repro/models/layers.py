@@ -1,0 +1,92 @@
+"""Shared transformer building blocks (pytree-functional, no flax)."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def init_dense(key: Array, d_in: int, d_out: int, dtype, bias: bool = False) -> Dict:
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * (d_in**-0.5)
+    p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Dict, x: Array) -> Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_rmsnorm(d: int, dtype) -> Dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Dict, x: Array, eps: float = 1e-5) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_embedding(key: Array, vocab: int, d: int, dtype) -> Dict:
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(p: Dict, tokens: Array) -> Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p: Dict, x: Array) -> Array:
+    return x @ p["table"].T
+
+
+def swiglu_init(key: Array, d: int, d_ff: int, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(k1, d, d_ff, dtype),
+        "w_up": init_dense(k2, d, d_ff, dtype),
+        "w_down": init_dense(k3, d_ff, d, dtype),
+    }
+
+
+def swiglu(p: Dict, x: Array) -> Array:
+    return dense(p["w_down"], jax.nn.silu(dense(p["w_gate"], x)) * dense(p["w_up"], x))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10_000.0) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, *, mode: str = "standard") -> Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S).
+
+    mode="standard": rotate the full head_dim.
+    mode="2d": ChatGLM-style 2D RoPE — rotate only the first half of
+    head_dim, pass the second half through (arXiv:2406.12793).
+    """
+    if mode == "none":
+        return x
+    hd = x.shape[-1]
+    rot_dim = hd if mode == "standard" else hd // 2
+    freqs = rope_freqs(rot_dim)                                   # (rot_dim/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs     # (..., S, rot/2)
+    angles = angles[..., None, :]                                 # (..., S, 1, rot/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    xr = x[..., :rot_dim].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    if rot_dim == hd:
+        return rotated
+    return jnp.concatenate([rotated, x[..., rot_dim:]], axis=-1)

@@ -1,0 +1,198 @@
+"""Mixture-of-Experts FFN with token-choice top-k routing.
+
+Scatter/gather dispatch (no (T, E, C) one-hot dispatch tensor — that would
+be quadratic-in-capacity and unshardable at the assigned scales):
+
+  1. router logits -> top-k experts + softmaxed gates per token;
+  2. per-(token, slot) rank within its expert via a masked cumulative sum;
+  3. tokens scatter-add into a per-expert capacity buffer (E*C, d) —
+     under expert-parallel sharding XLA lowers this boundary into the
+     all-to-all the MoE literature expects;
+  4. batched expert SwiGLU over (E, C, d);
+  5. gather back per-(token, slot) and combine with gate weights.
+
+Capacity C = ceil(T * k / E * capacity_factor); overflowing tokens are
+dropped (standard Switch behaviour) and counted in aux stats. The
+load-balance auxiliary loss is the Switch/GShard form: E * sum_e f_e * p_e.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import init_dense, swiglu, swiglu_init
+
+Array = jax.Array
+
+
+def init_moe(key: Array, cfg: ArchConfig, dtype) -> Dict:
+    kr, ke = jax.random.split(key)
+    experts = jax.vmap(
+        lambda k: swiglu_init(k, cfg.d_model, cfg.d_ff, dtype)
+    )(jax.random.split(ke, cfg.num_experts))
+    return {
+        "router": init_dense(kr, cfg.d_model, cfg.num_experts, dtype),
+        "experts": experts,  # stacked on leading E axis
+    }
+
+
+def moe_ffn(p: Dict, cfg: ArchConfig, x: Array) -> Tuple[Array, Dict]:
+    """x: (B, S, d) -> (out, aux). Token-choice top-k with capacity.
+
+    On a production mesh this routes to the shard_map implementation
+    (moe_ffn_sharded) — dispatch-free expert parallelism. The plain SPMD
+    path below is the mesh-less (tests / reduced-config) reference.
+    """
+    from repro.launch import pspec
+
+    mesh = pspec.active_mesh()
+    if mesh is not None and "model" in mesh.axis_names:
+        if cfg.num_experts % mesh.shape["model"] == 0:
+            return moe_ffn_sharded(p, cfg, x, mesh)
+    return moe_ffn_dense(p, cfg, x)
+
+
+def moe_ffn_dense(p: Dict, cfg: ArchConfig, x: Array) -> Tuple[Array, Dict]:
+    """Reference single-device dispatch (scatter/gather)."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    C = int(-(-T * k // E) * cfg.moe_capacity_factor)
+    xt = x.reshape(T, d)
+
+    logits = (xt @ p["router"]["w"]).astype(jnp.float32)             # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, sel = jax.lax.top_k(probs, k)                          # (T, k)
+    gates = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # rank of each (token, slot) within its selected expert
+    onehot = jax.nn.one_hot(sel, E, dtype=jnp.int32)                  # (T, k, E)
+    flat = onehot.reshape(T * k, E)
+    ranks = jnp.cumsum(flat, axis=0) - flat                           # exclusive
+    rank = jnp.sum(ranks * flat, axis=-1)                             # (T*k,)
+    expert = sel.reshape(T * k)
+    keep = rank < C
+    slot = jnp.where(keep, expert * C + rank, E * C)                  # overflow bin
+
+    # dispatch: scatter tokens into the capacity buffer
+    buf = jnp.zeros((E * C + 1, d), x.dtype)
+    src = jnp.repeat(xt, k, axis=0)                                   # (T*k, d)
+    buf = buf.at[slot].add(src)
+    expert_in = buf[: E * C].reshape(E, C, d)
+    # Perf (EXPERIMENTS.md §Perf iter 1): split experts over "model" AND the
+    # capacity dim over "data" — without the C-dim constraint XLA replicates
+    # the whole capacity buffer per data shard and every shard redundantly
+    # computes all C expert-token rows (~data_axis x wasted MXU flops).
+    from repro.launch.pspec import DATA, MODEL, constrain
+
+    expert_in = constrain(expert_in, MODEL, DATA, None)
+
+    # batched expert SwiGLU
+    expert_out = jax.vmap(swiglu)(p["experts"], expert_in)            # (E, C, d)
+    expert_out = constrain(expert_out, MODEL, DATA, None)
+
+    # combine: gather processed tokens and gate-weighted sum over k slots
+    flat_out = jnp.concatenate(
+        [expert_out.reshape(E * C, d), jnp.zeros((1, d), x.dtype)], axis=0
+    )
+    per_slot = flat_out[slot].reshape(T, k, d)
+    out = jnp.einsum("tk,tkd->td", gates.astype(x.dtype), per_slot)
+
+    # Switch load-balance aux loss + router stats
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(sel[:, 0], E, dtype=jnp.float32), axis=0
+    )
+    mean_prob = jnp.mean(probs, axis=0)
+    aux_loss = E * jnp.sum(frac_tokens * mean_prob)
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    aux = {"moe_aux_loss": aux_loss, "moe_drop_frac": dropped}
+    return out.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# shard_map expert parallelism (EXPERIMENTS.md §Perf, dbrx iterations 1-2)
+# ---------------------------------------------------------------------------
+#
+# Megatron-style layouts replicate the token activations across the "model"
+# axis, so every model shard ALREADY HOLDS every token: dispatch needs no
+# token movement at all. Each model shard runs its local experts over the
+# tokens routed to them and contributes a partial output; one psum over
+# "model" (the same collective the attention block pays for its output
+# projection) combines expert outputs. Per-device expert FLOPs are
+# T_local * k * capacity_factor * 3 * 2 * d * ff / E_shards — the ideal —
+# and the scatter/all-gather traffic of the naive SPMD dispatch vanishes.
+
+
+def moe_ffn_sharded(p: Dict, cfg: ArchConfig, x: Array, mesh) -> Tuple[Array, Dict]:
+    from jax.sharding import PartitionSpec as P
+
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    E, k = cfg.num_experts, cfg.experts_per_token
+    msize = mesh.shape["model"]
+    E_loc = E // msize
+
+    def local(x_l: Array, router_w: Array, experts_l) -> Tuple[Array, Array]:
+        B_l, S, d = x_l.shape
+        T = B_l * S
+        C = int(-(-T * k // E) * cfg.moe_capacity_factor)
+        xt = x_l.reshape(T, d)
+        logits = (xt @ router_w).astype(jnp.float32)              # (T, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, sel = jax.lax.top_k(probs, k)                  # (T, k)
+        gates = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+        # rank within each (global) expert — identical on every model shard
+        onehot = jax.nn.one_hot(sel, E, dtype=jnp.int32)
+        flat = onehot.reshape(T * k, E)
+        ranks = jnp.cumsum(flat, axis=0) - flat
+        rank = jnp.sum(ranks * flat, axis=-1)                     # (T*k,)
+        expert = sel.reshape(T * k)
+
+        # keep only MY experts (model-shard local), under capacity
+        first = jax.lax.axis_index("model") * E_loc
+        local_e = expert - first
+        mine = (local_e >= 0) & (local_e < E_loc) & (rank < C)
+        slot = jnp.where(mine, local_e * C + rank, E_loc * C)
+
+        buf = jnp.zeros((E_loc * C + 1, d), x_l.dtype)
+        src = jnp.repeat(xt, k, axis=0)
+        buf = buf.at[slot].add(src)
+        expert_in = buf[: E_loc * C].reshape(E_loc, C, d)
+        expert_out = jax.vmap(swiglu)(experts_l, expert_in)       # (E_loc, C, d)
+
+        flat_out = jnp.concatenate(
+            [expert_out.reshape(E_loc * C, d), jnp.zeros((1, d), x_l.dtype)], 0
+        )
+        per_slot = flat_out[slot].reshape(T, k, d)                # zeros if not mine
+        out = jnp.einsum("tk,tkd->td", gates.astype(x_l.dtype), per_slot)
+        out = jax.lax.psum(out, "model")                          # combine experts
+
+        frac = jnp.mean(jax.nn.one_hot(sel[:, 0], E, dtype=jnp.float32), axis=0)
+        aux = E * jnp.sum(frac * jnp.mean(probs, axis=0))
+        if dp:
+            aux = jax.lax.pmean(aux, dp)                          # avg over data
+        return out.reshape(B_l, S, d), aux
+
+    # batch axis sharding only when divisible (long_500k has B=1)
+    import numpy as np
+
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    bspec = dp if (dp and x.shape[0] % dp_size == 0) else None
+    if bspec is None:
+        dp = ()
+    in_specs = (
+        P(bspec, None, None),                          # x: batch-sharded
+        P(None, None),                                 # router: replicated
+        jax.tree.map(lambda _: P("model"), p["experts"]),  # expert-sharded
+    )
+    out_specs = (P(bspec, None, None), P())
+    fn = jax.shard_map(
+        local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )
+    out, aux_loss = fn(x, p["router"]["w"], p["experts"])
+    return out, {"moe_aux_loss": aux_loss,
+                 "moe_drop_frac": jnp.zeros((), jnp.float32)}

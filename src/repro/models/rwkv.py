@@ -1,0 +1,204 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892) — attention-free token mixing with
+data-dependent decay.
+
+Faithful structure, moderately simplified parameterisation:
+* time-mix block: token shift with learned per-channel mix coefficients for
+  r/k/v/w/g; DATA-DEPENDENT decay w_t = exp(-exp(w0 + tanh(x W_a) W_b))
+  (the defining Finch feature — a low-rank "LoRA" on the decay);
+* per-head linear-attention state S in R^{hd x hd}:
+      y_t = r_t^T (S_{t-1} + (u * k_t) v_t^T)
+      S_t = diag(w_t) S_{t-1} + k_t v_t^T
+* channel-mix block: token shift + squared-ReLU MLP with receptance gate.
+
+Training/prefill scans over time; decode carries (x_prev_tm, x_prev_cm, S).
+FedGAT applicability: attention-free — no pairwise exp score to
+approximate; runs under the federated runtime only (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense, init_dense, rmsnorm, init_rmsnorm
+
+Array = jax.Array
+
+DECAY_RANK = 32
+
+
+class RWKVState(NamedTuple):
+    x_prev_tm: Array   # (B, d)   last input of the time-mix block
+    x_prev_cm: Array   # (B, d)   last input of the channel-mix block
+    S: Array           # (B, H, hd, hd) linear-attention state
+
+
+def init_rwkv_layer(key: Array, cfg: ArchConfig, dtype) -> Dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim if cfg.num_heads else 64
+    ks = jax.random.split(key, 12)
+    heads = d // hd
+    return {
+        "ln1": init_rmsnorm(d, dtype),
+        "ln2": init_rmsnorm(d, dtype),
+        "mix": {  # per-channel token-shift mix coefficients for r,k,v,w,g
+            name: jnp.full((d,), 0.5, dtype) for name in ("r", "k", "v", "w", "g")
+        },
+        "wr": init_dense(ks[0], d, d, dtype),
+        "wk": init_dense(ks[1], d, d, dtype),
+        "wv": init_dense(ks[2], d, d, dtype),
+        "wg": init_dense(ks[3], d, d, dtype),
+        "wo": init_dense(ks[4], d, d, dtype),
+        "w0": jnp.full((d,), -2.0, dtype),                   # decay bias
+        "wa": init_dense(ks[5], d, DECAY_RANK, dtype),       # decay LoRA in
+        "wb": init_dense(ks[6], DECAY_RANK, d, dtype),       # decay LoRA out
+        "u": (jax.random.normal(ks[7], (d,), jnp.float32) * 0.1).astype(dtype),
+        "ln_x": init_rmsnorm(d, dtype),
+        # channel mix
+        "cm_mix": {name: jnp.full((d,), 0.5, dtype) for name in ("k", "r")},
+        "cm_k": init_dense(ks[8], d, cfg.d_ff, dtype),
+        "cm_v": init_dense(ks[9], cfg.d_ff, d, dtype),
+        "cm_r": init_dense(ks[10], d, d, dtype),
+    }
+
+
+def _shift_mix(x: Array, x_prev: Array, mu: Array) -> Array:
+    """lerp(x, x_prev, mu) — RWKV token shift (single step)."""
+    return x + (x_prev - x) * mu
+
+
+def _decay(p: Dict, xw: Array) -> Array:
+    """Data-dependent decay in (0, 1): exp(-exp(w0 + lora(x)))."""
+    lora = dense(p["wb"], jnp.tanh(dense(p["wa"], xw)))
+    return jnp.exp(-jnp.exp((p["w0"] + lora).astype(jnp.float32)))
+
+
+def _time_mix_step(
+    p: Dict, cfg: ArchConfig, x: Array, x_prev: Array, S: Array
+) -> Tuple[Array, Array]:
+    """One token. x: (B, d), S: (B, H, hd, hd). Returns (y, S_new)."""
+    B, d = x.shape
+    hd = cfg.resolved_head_dim if cfg.num_heads else 64
+    H = d // hd
+    r = dense(p["wr"], _shift_mix(x, x_prev, p["mix"]["r"]))
+    k = dense(p["wk"], _shift_mix(x, x_prev, p["mix"]["k"]))
+    v = dense(p["wv"], _shift_mix(x, x_prev, p["mix"]["v"]))
+    g = jax.nn.silu(dense(p["wg"], _shift_mix(x, x_prev, p["mix"]["g"])))
+    w = _decay(p, _shift_mix(x, x_prev, p["mix"]["w"]))          # (B, d) in (0,1)
+
+    rh = r.reshape(B, H, hd).astype(jnp.float32)
+    kh = k.reshape(B, H, hd).astype(jnp.float32)
+    vh = v.reshape(B, H, hd).astype(jnp.float32)
+    wh = w.reshape(B, H, hd)
+    uh = p["u"].reshape(H, hd).astype(jnp.float32)
+
+    kv = jnp.einsum("bhk,bhv->bhkv", kh, vh)                     # k_t v_t^T
+    att = S + uh[None, :, :, None] * kv                          # bonus on current
+    y = jnp.einsum("bhk,bhkv->bhv", rh, att)
+    S_new = wh[..., None] * S + kv
+    y = y.reshape(B, d)
+    y = rmsnorm(p["ln_x"], y.astype(x.dtype))
+    return dense(p["wo"], (y * g).astype(x.dtype)), S_new
+
+
+def _channel_mix_step(p: Dict, x: Array, x_prev: Array) -> Array:
+    xk = _shift_mix(x, x_prev, p["cm_mix"]["k"])
+    xr = _shift_mix(x, x_prev, p["cm_mix"]["r"])
+    k = jnp.square(jax.nn.relu(dense(p["cm_k"], xk)))
+    return jax.nn.sigmoid(dense(p["cm_r"], xr)) * dense(p["cm_v"], k)
+
+
+def init_rwkv_state(cfg: ArchConfig, batch: int, dtype) -> RWKVState:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim if cfg.num_heads else 64
+    H = d // hd
+    return RWKVState(
+        x_prev_tm=jnp.zeros((batch, d), dtype),
+        x_prev_cm=jnp.zeros((batch, d), dtype),
+        S=jnp.zeros((batch, H, hd, hd), jnp.float32),
+    )
+
+
+def rwkv_layer_step(
+    p: Dict, cfg: ArchConfig, x: Array, state: RWKVState, eps: float
+) -> Tuple[Array, RWKVState]:
+    """One token through time-mix + channel-mix (with pre-norms)."""
+    xn = rmsnorm(p["ln1"], x, eps)
+    y, S_new = _time_mix_step(p, cfg, xn, state.x_prev_tm, state.S)
+    x = x + y
+    xn2 = rmsnorm(p["ln2"], x, eps)
+    x = x + _channel_mix_step(p, xn2, state.x_prev_cm)
+    return x, RWKVState(x_prev_tm=xn, x_prev_cm=xn2, S=S_new)
+
+
+def rwkv_layer_seq(
+    p: Dict, cfg: ArchConfig, x: Array, state: RWKVState, eps: float
+) -> Tuple[Array, RWKVState]:
+    """Full sequence. x: (B, S, d).
+
+    Perf-restructured (EXPERIMENTS.md §Perf, rwkv iteration 1): ALL dense
+    projections (r/k/v/w/g, decay LoRA, channel mix) are batched over the
+    full sequence OUTSIDE the time recurrence, so the model-parallel psum
+    happens once per layer instead of once per (layer x timestep) — the
+    lax.scan carries only the elementwise per-head state update. Numerically
+    identical to scanning rwkv_layer_step (asserted in tests).
+    """
+    B, S, d = x.shape
+    hd = cfg.resolved_head_dim if cfg.num_heads else 64
+    H = d // hd
+
+    # ---- time-mix block ----
+    xn = rmsnorm(p["ln1"], x, eps)
+    shifted = jnp.concatenate([state.x_prev_tm[:, None, :], xn[:, :-1, :]], axis=1)
+
+    def mixed(name):
+        return xn + (shifted - xn) * p["mix"][name]
+
+    # (§Perf rwkv iteration 2 tried fusing the four r/k/v/g branch matmuls
+    # into two concatenated ones to share the backward psum; REFUTED — the
+    # on-the-fly weight concat made XLA insert collective-permute resharding
+    # that outweighed the 22% all-reduce saving. Kept the simple form.)
+    r = dense(p["wr"], mixed("r"))
+    k = dense(p["wk"], mixed("k"))
+    v = dense(p["wv"], mixed("v"))
+    g = jax.nn.silu(dense(p["wg"], mixed("g")))
+    w = _decay(p, mixed("w"))                                    # (B, S, d)
+
+    # §Perf rwkv iteration 3: keep the STATE recurrence in f32 (decay-product
+    # stability) but stream r/k/v through the scan in the model dtype — the
+    # backward-pass activation psums then run at half width. The f32 upcast
+    # happens per step on the VPU (free next to the state FMA).
+    rh = r.reshape(B, S, H, hd)
+    kh = k.reshape(B, S, H, hd)
+    vh = v.reshape(B, S, H, hd)
+    wh = w.reshape(B, S, H, hd)                      # f32: decay precision
+    uh = p["u"].reshape(H, hd).astype(jnp.float32)
+
+    def step(S_st, t):
+        r_t, k_t, v_t, w_t = t
+        r_t = r_t.astype(jnp.float32)
+        kv = jnp.einsum(
+            "bhk,bhv->bhkv",
+            k_t.astype(jnp.float32), v_t.astype(jnp.float32),
+        )
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S_st + uh[None, :, :, None] * kv)
+        return w_t[..., None] * S_st + kv, y
+
+    xs = tuple(jnp.swapaxes(a, 0, 1) for a in (rh, kh, vh, wh))
+    S_new, ys = jax.lax.scan(step, state.S, xs)
+    y = jnp.swapaxes(ys, 0, 1).reshape(B, S, d)                  # (B, S, d)
+    y = rmsnorm(p["ln_x"], y.astype(x.dtype))
+    x = x + dense(p["wo"], (y * g).astype(x.dtype))
+
+    # ---- channel-mix block ----
+    xn2 = rmsnorm(p["ln2"], x, eps)
+    shifted2 = jnp.concatenate([state.x_prev_cm[:, None, :], xn2[:, :-1, :]], axis=1)
+    xk = xn2 + (shifted2 - xn2) * p["cm_mix"]["k"]
+    xr = xn2 + (shifted2 - xn2) * p["cm_mix"]["r"]
+    kcm = jnp.square(jax.nn.relu(dense(p["cm_k"], xk)))
+    x = x + jax.nn.sigmoid(dense(p["cm_r"], xr)) * dense(p["cm_v"], kcm)
+
+    new_state = RWKVState(x_prev_tm=xn[:, -1, :], x_prev_cm=xn2[:, -1, :], S=S_new)
+    return x, new_state

@@ -1,0 +1,357 @@
+"""Unified decoder-only LM covering the dense / moe / ssm / hybrid / vlm
+families, with a single lax.scan over stacked per-layer parameters (the HLO
+contains each layer body once — essential for the 80-layer dry-run and the
+production-correct choice for compile time).
+
+Layer bodies by family:
+  dense | vlm : pre-norm GQA attention + SwiGLU
+  moe         : pre-norm GQA attention + token-choice top-k MoE
+  hybrid      : Hymba parallel (attention || mamba) + SwiGLU
+  ssm         : RWKV-6 time-mix + channel-mix (attention-free)
+
+The same stacked-parameter layout serves three entry points:
+  lm_loss     — next-token CE (+ MoE aux) for train_step
+  lm_prefill  — forward returning per-layer decode caches
+  lm_decode   — single-token step updating the caches
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import hybrid as hyb
+from repro.models import rwkv as rwkv_mod
+from repro.models.attention import (
+    KVCache,
+    attention_decode,
+    attention_full,
+    init_attention,
+    init_kv_cache,
+)
+from repro.models.layers import (
+    embed,
+    init_embedding,
+    init_rmsnorm,
+    rmsnorm,
+    swiglu,
+    swiglu_init,
+    unembed,
+)
+from repro.models.moe import init_moe, moe_ffn
+
+Array = jax.Array
+
+MOE_AUX_COEF = 0.01
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def cheb_coeffs(cfg: ArchConfig) -> Optional[Array]:
+    if cfg.attention_variant != "chebyshev":
+        return None
+    from repro.core.chebyshev import attention_series
+
+    q = attention_series(cfg.cheb_degree, (-cfg.cheb_domain, cfg.cheb_domain), basis="power")
+    return jnp.asarray(q, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_layer(key: Array, cfg: ArchConfig) -> Dict:
+    dt = _dtype(cfg)
+    if cfg.family == "ssm":
+        return rwkv_mod.init_rwkv_layer(key, cfg, dt)
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {
+        "ln1": init_rmsnorm(cfg.d_model, dt),
+        "ln2": init_rmsnorm(cfg.d_model, dt),
+    }
+    if cfg.family == "hybrid":
+        p["hymba"] = hyb.init_hymba_block(k1, cfg, dt)
+        p["mlp"] = swiglu_init(k2, cfg.d_model, cfg.d_ff, dt)
+    elif cfg.family == "moe":
+        p["attn"] = init_attention(k1, cfg, dt)
+        p["moe"] = init_moe(k2, cfg, dt)
+    else:  # dense | vlm
+        p["attn"] = init_attention(k1, cfg, dt)
+        p["mlp"] = swiglu_init(k2, cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_lm(key: Array, cfg: ArchConfig) -> Dict:
+    dt = _dtype(cfg)
+    ke, kl, kh = jax.random.split(key, 3)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(jax.random.split(kl, cfg.num_layers))
+    params = {
+        "embed": init_embedding(ke, cfg.padded_vocab(), cfg.d_model, dt),
+        "layers": layers,
+        "final_norm": init_rmsnorm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = init_embedding(kh, cfg.padded_vocab(), cfg.d_model, dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _layer_seq(
+    lp: Dict, cfg: ArchConfig, x: Array, positions: Array, coeffs, collect_cache: bool
+):
+    """One layer over the full sequence. Returns (x, cache_ys)."""
+    B = x.shape[0]
+    zero = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        st0 = rwkv_mod.init_rwkv_state(cfg, B, x.dtype)
+        x, st = rwkv_mod.rwkv_layer_seq(lp, cfg, x, st0, cfg.norm_eps)
+        return x, (st if collect_cache else 0), zero
+    if cfg.family == "hybrid":
+        st0 = hyb.init_mamba_state(cfg, B, x.dtype)
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        out, k, v, st = hyb.hymba_block_seq(lp["hymba"], cfg, h, positions, st0, coeffs)
+        x = x + out
+        h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + swiglu(lp["mlp"], h2)
+        return x, ((k, v, st) if collect_cache else 0), zero
+    # dense / vlm / moe
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    out, (k, v) = attention_full(lp["attn"], cfg, h, positions, coeffs=coeffs)
+    x = x + out
+    h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        ffn_out, aux = moe_ffn(lp["moe"], cfg, h2)
+        x = x + ffn_out
+        extra = aux["moe_aux_loss"]
+    else:
+        x = x + swiglu(lp["mlp"], h2)
+        extra = zero
+    return x, ((k, v) if collect_cache else 0), extra
+
+
+def lm_backbone(
+    params: Dict,
+    cfg: ArchConfig,
+    x: Array,
+    positions: Array,
+    *,
+    coeffs=None,
+    collect_cache: bool = False,
+    remat: bool = False,
+) -> Tuple[Array, Any, Array]:
+    """Embedded input -> final hidden. Returns (x, per-layer ys, moe_aux)."""
+
+    def body2(carry, lp):
+        newx, ys, extra = _layer_seq(lp, cfg, carry, positions, coeffs, collect_cache)
+        return newx, (ys, extra)
+
+    fn = jax.checkpoint(body2) if remat else body2
+    x, (caches, extras) = jax.lax.scan(fn, x, params["layers"])
+    return x, caches, jnp.sum(extras)
+
+
+def lm_logits(params: Dict, cfg: ArchConfig, x: Array) -> Array:
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["head"]
+    return unembed(table, x).astype(jnp.float32)
+
+
+def lm_forward(
+    params: Dict,
+    cfg: ArchConfig,
+    tokens: Array,
+    *,
+    prefix: Optional[Array] = None,
+    coeffs=None,
+    collect_cache: bool = False,
+    remat: bool = False,
+):
+    """tokens (B, S); prefix (B, P, d) patch/frame embeddings for vlm."""
+    x = embed(params["embed"], tokens)
+    if prefix is not None:
+        x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x, caches, aux = lm_backbone(
+        params, cfg, x, positions,
+        coeffs=coeffs, collect_cache=collect_cache, remat=remat,
+    )
+    return lm_logits(params, cfg, x), caches, aux
+
+
+def lm_loss(
+    params: Dict,
+    cfg: ArchConfig,
+    tokens: Array,
+    labels: Array,
+    *,
+    prefix: Optional[Array] = None,
+    coeffs=None,
+    remat: bool = True,
+) -> Tuple[Array, Dict]:
+    """Next-token cross entropy; loss only over text positions (labels -100
+    are masked, and VLM prefix positions carry no loss by construction)."""
+    logits, _, aux = lm_forward(
+        params, cfg, tokens, prefix=prefix, coeffs=coeffs, remat=remat
+    )
+    if prefix is not None:
+        logits = logits[:, prefix.shape[1]:, :]
+    mask = (labels >= 0).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = jnp.take_along_axis(logp, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    ce = -jnp.sum(tgt * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = ce + MOE_AUX_COEF * aux
+    return total, {"ce": ce, "moe_aux": aux}
+
+
+def lm_prefill(
+    params: Dict,
+    cfg: ArchConfig,
+    tokens: Array,
+    *,
+    prefix: Optional[Array] = None,
+    coeffs=None,
+    cache_len: Optional[int] = None,
+) -> Tuple[Array, "DecodeCache"]:
+    """Forward over the prompt, returning last-position logits + decode cache.
+
+    With a sliding window the cache keeps only the last W positions
+    (circular layout consistent with lm_decode_step's ``pos % W`` writes).
+    """
+    logits, caches, _ = lm_forward(
+        params, cfg, tokens, prefix=prefix, coeffs=coeffs, collect_cache=True
+    )
+    B = tokens.shape[0]
+    S = tokens.shape[1] + (prefix.shape[1] if prefix is not None else 0)
+    pos_row = jnp.arange(S, dtype=jnp.int32)
+
+    def window(arr):
+        """Keep last W positions, placed at slots pos % W (axis 2 = seq)."""
+        W = cfg.sliding_window
+        if not W or S <= W:
+            return arr
+        tail = arr[:, :, S - W:]
+        # roll so that absolute position p sits at slot p % W
+        return jnp.roll(tail, (S - W) % W, axis=2)
+
+    if cfg.family == "ssm":
+        return logits[:, -1:, :], DecodeCache(kv=0, ssm=caches, pos=jnp.asarray(S, jnp.int32))
+
+    if cfg.family == "hybrid":
+        k, v, st = caches
+        ssm = st
+    else:
+        k, v = caches
+        ssm = 0
+    # k/v: (L, B, S, KV, hd)
+    pos = jnp.broadcast_to(pos_row[None, None], (cfg.num_layers, B, S))
+    k, v, pos = window(k), window(v), window(pos)
+    # Grow the cache to cache_len so decode steps have free slots
+    # (slot layout must stay pos % W-consistent, so pad only when not rolled).
+    W_now = k.shape[2]
+    target = cache_len or (S + 128)
+    if cfg.sliding_window:
+        target = min(target, cfg.sliding_window)
+    if target > W_now:
+        padn = target - W_now
+        padk = jnp.zeros(k.shape[:2] + (padn,) + k.shape[3:], k.dtype)
+        k = jnp.concatenate([k, padk], axis=2)
+        v = jnp.concatenate([v, padk.astype(v.dtype)], axis=2)
+        pos = jnp.concatenate(
+            [pos, jnp.full(pos.shape[:2] + (padn,), -1, jnp.int32)], axis=2
+        )
+    kv = KVCache(k=k, v=v, pos=pos)
+    return logits[:, -1:, :], DecodeCache(kv=kv, ssm=ssm, pos=jnp.asarray(S, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+class DecodeCache(NamedTuple):
+    kv: Any          # stacked KVCache (leading layer axis) or 0
+    ssm: Any         # stacked RWKVState / MambaState or 0
+    pos: Array       # scalar int32 — next absolute position
+
+
+def init_decode_cache(cfg: ArchConfig, batch: int, cache_len: int) -> DecodeCache:
+    dt = _dtype(cfg)
+    L = cfg.num_layers
+    if cfg.family == "ssm":
+        st = rwkv_mod.init_rwkv_state(cfg, batch, dt)
+        ssm = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (L,) + a.shape), st)
+        return DecodeCache(kv=0, ssm=ssm, pos=jnp.zeros((), jnp.int32))
+    W = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+    kv1 = init_kv_cache(cfg, batch, W, dt)
+    kv = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (L,) + a.shape), kv1)
+    ssm = 0
+    if cfg.family == "hybrid":
+        st = hyb.init_mamba_state(cfg, batch, dt)
+        ssm = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (L,) + a.shape), st)
+    return DecodeCache(kv=kv, ssm=ssm, pos=jnp.zeros((), jnp.int32))
+
+
+def lm_decode_step(
+    params: Dict,
+    cfg: ArchConfig,
+    cache: DecodeCache,
+    token: Array,
+    *,
+    coeffs=None,
+) -> Tuple[Array, DecodeCache]:
+    """token: (B, 1) -> (logits (B, 1, V), new cache)."""
+    x = embed(params["embed"], token)
+    pos = cache.pos
+
+    def body(carry, xs):
+        x = carry
+        if cfg.family == "ssm":
+            lp, st = xs
+            x, st_new = rwkv_mod.rwkv_layer_step(
+                lp, cfg, x[:, 0, :], st, cfg.norm_eps
+            )
+            return x[:, None, :], (0, st_new)
+        if cfg.family == "hybrid":
+            lp, kv, st = xs
+            h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            out, kv_new, st_new = hyb.hymba_block_step(
+                lp["hymba"], cfg, h, pos, kv, st, coeffs
+            )
+            x = x + out
+            h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+            x = x + swiglu(lp["mlp"], h2)
+            return x, (kv_new, st_new)
+        lp, kv = xs
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        out, kv_new = attention_decode(lp["attn"], cfg, h, pos, kv, coeffs=coeffs)
+        x = x + out
+        h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if cfg.family == "moe":
+            ffn_out, _ = moe_ffn(lp["moe"], cfg, h2)
+            x = x + ffn_out
+        else:
+            x = x + swiglu(lp["mlp"], h2)
+        return x, (kv_new,)
+
+    if cfg.family == "ssm":
+        xs = (params["layers"], cache.ssm)
+        x, (_, ssm_new) = jax.lax.scan(body, x, xs)
+        new_cache = DecodeCache(kv=0, ssm=ssm_new, pos=pos + 1)
+    elif cfg.family == "hybrid":
+        xs = (params["layers"], cache.kv, cache.ssm)
+        x, (kv_new, ssm_new) = jax.lax.scan(body, x, xs)
+        new_cache = DecodeCache(kv=kv_new, ssm=ssm_new, pos=pos + 1)
+    else:
+        xs = (params["layers"], cache.kv)
+        x, (kv_new,) = jax.lax.scan(body, x, xs)
+        new_cache = DecodeCache(kv=kv_new, ssm=0, pos=pos + 1)
+    return lm_logits(params, cfg, x), new_cache

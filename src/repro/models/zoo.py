@@ -1,0 +1,81 @@
+"""Model zoo: one uniform functional interface over all assigned families."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec as ed
+from repro.models import transformer as tf
+
+Array = jax.Array
+
+
+class Model(NamedTuple):
+    cfg: ArchConfig
+    init: Callable[[Array], Dict]
+    loss: Callable[..., Tuple[Array, Dict]]          # (params, batch)
+    prefill: Callable[..., Tuple[Array, Any]]        # (params, batch)
+    decode_step: Callable[..., Tuple[Array, Any]]    # (params, cache, token)
+    init_cache: Callable[..., Any]                   # (batch, cache_len, enc_len)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    coeffs = tf.cheb_coeffs(cfg)
+
+    if cfg.is_encdec:
+        def init(key):
+            return ed.init_encdec(key, cfg)
+
+        def loss(params, batch):
+            return ed.encdec_loss(
+                params, cfg, batch["frames"], batch["tokens"], batch["labels"],
+                coeffs=coeffs,
+            )
+
+        def prefill(params, batch):
+            memory = ed.encode(params, cfg, batch["frames"], coeffs=coeffs)
+            cross = ed.build_cross_cache(params, cfg, memory)
+            B = batch["tokens"].shape[0]
+            cache = ed.init_encdec_cache(
+                cfg, B, batch["cache_len"], memory.shape[1]
+            )._replace(cross_kv=cross)
+            # teacher-force the prompt tokens one step at a time is wasteful;
+            # here the decoder prompt is a single BOS handled by decode_step.
+            logits, cache = ed.encdec_decode_step(
+                params, cfg, cache, batch["tokens"][:, :1], coeffs=coeffs
+            )
+            return logits, cache
+
+        def decode_step(params, cache, token):
+            return ed.encdec_decode_step(params, cfg, cache, token, coeffs=coeffs)
+
+        def init_cache(batch, cache_len, enc_len=0):
+            return ed.init_encdec_cache(cfg, batch, cache_len, enc_len)
+
+        return Model(cfg, init, loss, prefill, decode_step, init_cache)
+
+    def init(key):
+        return tf.init_lm(key, cfg)
+
+    def loss(params, batch):
+        return tf.lm_loss(
+            params, cfg, batch["tokens"], batch["labels"],
+            prefix=batch.get("prefix"), coeffs=coeffs,
+        )
+
+    def prefill(params, batch):
+        return tf.lm_prefill(
+            params, cfg, batch["tokens"], prefix=batch.get("prefix"),
+            coeffs=coeffs, cache_len=batch.get("cache_len"),
+        )
+
+    def decode_step(params, cache, token):
+        return tf.lm_decode_step(params, cfg, cache, token, coeffs=coeffs)
+
+    def init_cache(batch, cache_len, enc_len=0):
+        return tf.init_decode_cache(cfg, batch, cache_len)
+
+    return Model(cfg, init, loss, prefill, decode_step, init_cache)

@@ -1,0 +1,62 @@
+"""Pytree-native Adam/AdamW + SGD (no optax in this container).
+
+Used by both the federated graph trainer (paper experiments use Adam with
+weight decay 1e-3, lr 0.1 — Appendix C) and the transformer zoo's training
+step.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def adam_init(params: PyTree) -> AdamState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=jax.tree.map(jnp.zeros_like, params))
+
+
+def adam_update(
+    grads: PyTree,
+    state: AdamState,
+    params: PyTree,
+    lr: float | jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Tuple[PyTree, AdamState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        return p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamState(step=step, mu=mu, nu=nu)
+
+
+def sgd_update(grads: PyTree, params: PyTree, lr: float | jax.Array) -> PyTree:
+    return jax.tree.map(lambda p, g: p - lr * g, params, grads)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    leaves = jax.tree.leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads)

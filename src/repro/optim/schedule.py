@@ -1,0 +1,26 @@
+"""Learning-rate schedules (plain callables of the integer step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    def fn(step):
+        return jnp.asarray(lr, jnp.float32)
+
+    return fn
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int, floor: float = 0.1):
+    """Linear warmup then cosine decay to ``floor * peak_lr``."""
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = floor * peak_lr + (1 - floor) * peak_lr * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return fn

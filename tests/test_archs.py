@@ -1,0 +1,218 @@
+"""Per-architecture smoke tests (assignment requirement f).
+
+Every assigned arch instantiates its REDUCED variant (2 layers,
+d_model <= 256, <= 4 experts) and runs: one forward/train step asserting
+output shapes + no NaNs, one optimizer step reducing loss, and
+prefill->decode consistency against the teacher-forced forward.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import build_model
+from repro.models import transformer as tf
+from repro.optim import adam_init, adam_update
+
+B, S = 2, 16
+
+
+def _batch(cfg, key, seq=S):
+    tok = jax.random.randint(key, (B, seq), 0, cfg.vocab_size)
+    batch = {"tokens": tok, "labels": tok}
+    if cfg.family == "vlm":
+        batch["prefix"] = jax.random.normal(key, (B, cfg.prefix_len, cfg.d_model))
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(
+            key, (B, max(seq // cfg.encoder_ratio, 2), cfg.d_model)
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.num_layers == 2 and cfg.d_model <= 512
+    assert (cfg.num_experts or 0) <= 4
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+
+    loss_fn = lambda p: m.loss(p, batch)[0]
+    loss0, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert np.isfinite(float(loss0))
+    # loss near log(padded_vocab) at init
+    assert abs(float(loss0) - np.log(cfg.padded_vocab())) < 1.5
+    # gradients finite and not all-zero
+    leaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(l).all()) for l in leaves)
+    assert any(float(jnp.abs(l).max()) > 0 for l in leaves)
+
+    opt = adam_init(params)
+    params2, opt = adam_update(grads, opt, params, lr=3e-3)
+    loss1 = float(jax.jit(loss_fn)(params2))
+    assert loss1 < float(loss0), f"{arch}: optimizer step did not reduce loss"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+
+    if cfg.is_encdec:
+        frames = jax.random.normal(jax.random.PRNGKey(2), (B, 4, cfg.d_model))
+        from repro.models import encdec as ed
+
+        memory = ed.encode(params, cfg, frames)
+        full = ed.decode_train(params, cfg, tok, memory)
+        cache = m.init_cache(B, 32, enc_len=4)
+        cache = cache._replace(cross_kv=ed.build_cross_cache(params, cfg, memory))
+        outs = []
+        for t in range(S):
+            lg, cache = m.decode_step(params, cache, tok[:, t : t + 1])
+            outs.append(lg)
+        dec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(full), rtol=5e-3, atol=5e-4)
+        return
+
+    prefix = (
+        jax.random.normal(jax.random.PRNGKey(3), (B, cfg.prefix_len, cfg.d_model))
+        if cfg.family == "vlm"
+        else None
+    )
+    full, _, _ = tf.lm_forward(params, cfg, tok, prefix=prefix)
+    batch = {"tokens": tok[:, : S - 1], "cache_len": 32}
+    if prefix is not None:
+        batch["prefix"] = prefix
+    logits_pf, cache = m.prefill(params, batch)
+    np.testing.assert_allclose(
+        np.asarray(logits_pf[:, -1]), np.asarray(full[:, -2]), rtol=5e-3, atol=5e-4
+    )
+    logits_dec, cache = m.decode_step(params, cache, tok[:, S - 1 : S])
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[:, 0]), np.asarray(full[:, -1]), rtol=5e-3, atol=5e-4
+    )
+
+
+def test_sliding_window_limits_attention():
+    """With window W, decode at position p must ignore keys <= p - W."""
+    cfg = get_config("yi-6b").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    W = cfg.sliding_window
+    assert W == 16
+    # receptive field of an L-layer windowed model is L*W; exceed it so
+    # token 0 genuinely cannot influence the last position
+    seq = cfg.num_layers * W + 2
+    tok = jax.random.randint(jax.random.PRNGKey(1), (B, seq), 0, cfg.vocab_size)
+    # perturbing a token OUTSIDE the window must not change the last logits
+    logits_a, _, _ = tf.lm_forward(params, cfg, tok)
+    tok_b = tok.at[:, 0].set((tok[:, 0] + 1) % cfg.vocab_size)
+    logits_b, _, _ = tf.lm_forward(params, cfg, tok_b)
+    np.testing.assert_allclose(
+        np.asarray(logits_a[:, -1]), np.asarray(logits_b[:, -1]), atol=1e-5
+    )
+    # ...but perturbing inside the window does
+    tok_c = tok.at[:, -2].set((tok[:, -2] + 1) % cfg.vocab_size)
+    logits_c, _, _ = tf.lm_forward(params, cfg, tok_c)
+    assert float(jnp.abs(logits_a[:, -1] - logits_c[:, -1]).max()) > 1e-4
+
+
+def test_long_context_circular_cache():
+    """Decode far past the window: circular cache slots must stay coherent
+    (logits from cache == logits from the windowed full forward)."""
+    cfg = get_config("yi-6b").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    W = cfg.sliding_window
+    seq = W + 9
+    tok = jax.random.randint(jax.random.PRNGKey(1), (B, seq), 0, cfg.vocab_size)
+    full, _, _ = tf.lm_forward(params, cfg, tok)
+    cache = m.init_cache(B, W)
+    outs = []
+    for t in range(seq):
+        lg, cache = m.decode_step(params, cache, tok[:, t : t + 1])
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), rtol=5e-3, atol=5e-4)
+
+
+def test_moe_router_statistics():
+    cfg = get_config("granite-moe-1b-a400m").reduced()
+    from repro.models.moe import init_moe, moe_ffn
+
+    p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    out, aux = moe_ffn(p, cfg, x)
+    assert out.shape == x.shape
+    assert float(aux["moe_aux_loss"]) >= 1.0 - 1e-3  # >= 1 by Cauchy-Schwarz
+    assert float(aux["moe_drop_frac"]) == 0.0        # smoke capacity: no drops
+
+
+def test_chebyshev_attention_variant_runs():
+    """The FedGAT technique applied to a transformer: cheb-attention rows
+    still aggregate values (weights sum to 1) and training runs."""
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        get_config("yi-6b").reduced(), attention_variant="chebyshev", cheb_degree=8
+    )
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    loss, _ = jax.jit(m.loss)(params, batch)
+    assert np.isfinite(float(loss))
+    grads = jax.grad(lambda p: m.loss(p, batch)[0])(params)
+    assert all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(grads))
+
+
+def test_rwkv_state_decay_in_unit_interval():
+    from repro.models.rwkv import _decay, init_rwkv_layer
+
+    cfg = get_config("rwkv6-1.6b").reduced()
+    p = init_rwkv_layer(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, cfg.d_model)) * 3
+    w = _decay(p, x)
+    assert float(w.min()) > 0.0 and float(w.max()) < 1.0
+
+
+@pytest.mark.parametrize("arch", ["granite-moe-1b-a400m", "dbrx-132b"])
+def test_moe_routing_invariants(arch):
+    """Token-choice invariants: gates are a distribution over the selected
+    experts; with smoke capacity no token is dropped; output is a convex
+    combination of at most k expert outputs."""
+    from repro.models.moe import init_moe, moe_ffn
+
+    cfg = get_config(arch).reduced()
+    p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, cfg.d_model))
+    out, aux = moe_ffn(p, cfg, x)
+    assert float(aux["moe_drop_frac"]) == 0.0
+    # gate distribution check via direct recomputation
+    logits = (x.reshape(-1, cfg.d_model) @ p["router"]["w"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, sel = jax.lax.top_k(probs, cfg.experts_per_token)
+    gates = gate_vals / gate_vals.sum(-1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, rtol=1e-5)
+    # selected experts are distinct per token
+    s = np.asarray(sel)
+    for row in s[:16]:
+        assert len(set(row.tolist())) == cfg.experts_per_token
+
+
+def test_moe_zero_router_is_uniform_mixture():
+    """With a zero router every expert is equally likely; output must be
+    finite and the aux loss exactly E * sum(f_e * 1/E) = 1 for balanced f."""
+    import dataclasses
+    from repro.models.moe import init_moe, moe_ffn
+
+    cfg = get_config("granite-moe-1b-a400m").reduced()
+    p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    p["router"]["w"] = jnp.zeros_like(p["router"]["w"])
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    out, aux = moe_ffn(p, cfg, x)
+    assert bool(jnp.isfinite(out).all())
+    assert abs(float(aux["moe_aux_loss"]) - 1.0) < 0.2

@@ -1,0 +1,68 @@
+"""Chebyshev machinery: approximation quality, basis equivalence, Theorem 2."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import chebyshev as C
+
+DOMAIN = (-4.0, 4.0)
+
+
+def test_error_decreases_with_degree():
+    errs = []
+    for p in (4, 8, 16, 32):
+        c = C.chebyshev_coeffs(C.default_score_fn, p, DOMAIN)
+        errs.append(C.empirical_sup_error(C.default_score_fn, c, DOMAIN))
+    assert all(e2 < e1 for e1, e2 in zip(errs, errs[1:]))
+    assert errs[-1] < 0.05
+
+
+def test_smooth_function_converges_fast():
+    # exp is analytic: geometric convergence, tiny error at p=16.
+    c = C.chebyshev_coeffs(np.exp, 16, (-1.0, 1.0))
+    assert C.empirical_sup_error(np.exp, c, (-1.0, 1.0)) < 1e-12
+
+
+def test_power_and_cheb_basis_agree():
+    p = 12
+    cc = C.chebyshev_coeffs(C.default_score_fn, p, DOMAIN)
+    q = C.cheb_to_power(cc, DOMAIN)
+    x = jnp.linspace(-4.0, 4.0, 201)
+    y_pow = C.eval_power_series(jnp.asarray(q), x)
+    y_cheb = C.eval_chebyshev(jnp.asarray(cc), x, DOMAIN)
+    np.testing.assert_allclose(np.asarray(y_pow), np.asarray(y_cheb), rtol=2e-4, atol=2e-4)
+
+
+def test_theorem2_bound_formula():
+    # Bound must be positive, decreasing in p, increasing in V.
+    b1 = C.theorem2_bound(V=10.0, k=2, p=8)
+    b2 = C.theorem2_bound(V=10.0, k=2, p=16)
+    assert 0 < b2 < b1
+    assert C.theorem2_bound(V=20.0, k=2, p=8) > b1
+    with pytest.raises(ValueError):
+        C.theorem2_bound(V=1.0, k=4, p=4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(st.floats(-2, 2), min_size=1, max_size=9),
+    st.floats(-3.5, 3.5),
+)
+def test_power_series_matches_numpy(coeffs, x):
+    q = np.asarray(coeffs)
+    got = float(C.eval_power_series(jnp.asarray(q, jnp.float32), jnp.asarray(x, jnp.float32)))
+    want = float(np.polyval(q[::-1], x))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(6, 24))
+def test_attention_series_accurate_on_assumption_domain(p):
+    # Under paper Assumptions 2-3, |x_ij| <= 2 < R: the series must be tight there.
+    q = C.attention_series(p, DOMAIN, basis="power")
+    x = np.linspace(-2.0, 2.0, 101)
+    approx = np.polyval(np.asarray(q)[::-1], x)
+    err = np.max(np.abs(approx - C.default_score_fn(x)))
+    assert err < 0.25  # loose cap; tightness vs p checked above

@@ -1,0 +1,194 @@
+"""Federated runtime: partitioning, aggregation, comm accounting, training."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import FedGATConfig
+from repro.federated import (
+    FederatedConfig,
+    fedavg,
+    fedadam_server,
+    fedprox_grad,
+    cross_client_edge_count,
+    dirichlet_partition,
+    matrix_comm_cost,
+    vector_comm_cost,
+    run_federated,
+    train_centralized,
+)
+from repro.federated.partition import client_neighbor_masks, client_train_masks, l_hop_sizes
+from repro.graphs import make_cora_like
+from repro.optim.adamw import adam_init
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return make_cora_like("tiny", seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Partitioning
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 8), st.sampled_from([0.1, 1.0, 10_000.0]), st.integers(0, 99))
+def test_partition_covers_all_nodes(k, beta, seed):
+    labels = np.random.default_rng(seed).integers(0, 5, size=60)
+    part = dirichlet_partition(labels, k, beta, seed)
+    assert part.owner.shape == (60,)
+    assert part.owner.min() >= 0 and part.owner.max() < k
+    assert sum(len(part.client_nodes(i)) for i in range(k)) == 60
+
+
+def test_iid_beta_balances_clients():
+    labels = np.random.default_rng(0).integers(0, 5, size=500)
+    part = dirichlet_partition(labels, 5, beta=10_000.0, seed=0)
+    sizes = [len(part.client_nodes(k)) for k in range(5)]
+    assert max(sizes) - min(sizes) < 40  # near-uniform
+
+
+def test_noniid_beta_skews_labels():
+    labels = np.random.default_rng(0).integers(0, 5, size=500)
+    part = dirichlet_partition(labels, 5, beta=0.1, seed=0)
+    # At least one client should be strongly label-skewed.
+    skews = []
+    for k in range(5):
+        ls = labels[part.client_nodes(k)]
+        if len(ls):
+            skews.append(np.bincount(ls, minlength=5).max() / len(ls))
+    assert max(skews) > 0.5
+
+
+def test_client_masks_partition_train_nodes(graph):
+    part = dirichlet_partition(graph.labels, 4, 1.0, 0)
+    tr = client_train_masks(graph, part)
+    np.testing.assert_array_equal(tr.sum(axis=0).astype(bool), graph.train_mask)
+
+
+def test_distgat_masks_drop_cross_client_edges(graph):
+    part = dirichlet_partition(graph.labels, 4, 1.0, 0)
+    masks = client_neighbor_masks(graph, part)
+    owner_nb = part.owner[graph.nbr_idx]
+    for k in range(4):
+        kept = masks[k]
+        # every kept edge is internal (or a self-loop of a local node)
+        self_loop = graph.nbr_idx == np.arange(graph.num_nodes)[:, None]
+        internal = (part.owner[:, None] == k) & (owner_nb == k)
+        assert not (kept & ~(internal | self_loop)).any()
+    # union over clients ~ all intra-client edges only
+    union = masks.any(axis=0)
+    crossing = graph.nbr_mask & (part.owner[:, None] != owner_nb)
+    assert not (union & crossing & ~(graph.nbr_idx == np.arange(graph.num_nodes)[:, None])).any()
+
+
+def test_l_hop_sizes_monotone(graph):
+    part = dirichlet_partition(graph.labels, 4, 1.0, 0)
+    s1 = l_hop_sizes(graph, part, 1)
+    s2 = l_hop_sizes(graph, part, 2)
+    assert (s2 >= s1).all()
+
+
+# ---------------------------------------------------------------------------
+# Communication accounting (Theorem 1 / Appendix F)
+# ---------------------------------------------------------------------------
+
+def test_comm_cost_vector_cheaper_than_matrix(graph):
+    part = dirichlet_partition(graph.labels, 4, 1.0, 0)
+    m = matrix_comm_cost(graph, part)
+    v = vector_comm_cost(graph, part)
+    assert v.download_scalars < m.download_scalars
+    assert m.upload_scalars == graph.num_nodes * graph.feature_dim
+
+
+def test_comm_cost_grows_with_clients(graph):
+    costs = []
+    for k in (2, 4, 8):
+        part = dirichlet_partition(graph.labels, k, 10_000.0, 0)
+        costs.append(matrix_comm_cost(graph, part).download_scalars)
+    assert costs[0] < costs[-1]
+
+
+def test_iid_has_more_cross_edges_than_noniid():
+    g = make_cora_like("cora_like", seed=0)
+    iid = dirichlet_partition(g.labels, 8, 10_000.0, 0)
+    noniid = dirichlet_partition(g.labels, 8, 0.1, 0)
+    assert cross_client_edge_count(g.adj, iid) > cross_client_edge_count(g.adj, noniid)
+
+
+# ---------------------------------------------------------------------------
+# Aggregation
+# ---------------------------------------------------------------------------
+
+def test_fedavg_is_mean():
+    stacked = {"w": jnp.arange(12.0).reshape(3, 4)}
+    out = fedavg(stacked)
+    np.testing.assert_allclose(np.asarray(out["w"]), np.arange(12.0).reshape(3, 4).mean(0))
+
+
+def test_fedavg_weighted():
+    stacked = {"w": jnp.asarray([[0.0], [10.0]])}
+    out = fedavg(stacked, weights=jnp.asarray([3.0, 1.0]))
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.5])
+
+
+def test_fedprox_pulls_towards_global():
+    local = {"w": jnp.asarray(2.0)}
+    glob = {"w": jnp.asarray(0.0)}
+    grads = {"w": jnp.asarray(0.0)}
+    out = fedprox_grad(local, glob, grads, mu=0.5)
+    assert float(out["w"]) == 1.0  # mu * (local - global)
+
+
+def test_fedadam_moves_global_towards_mean():
+    glob = {"w": jnp.asarray(1.0)}
+    stacked = {"w": jnp.asarray([0.0, 0.0])}
+    state = adam_init(glob)
+    new, state = fedadam_server(glob, stacked, state, server_lr=0.1)
+    assert float(new["w"]) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# End-to-end federated training (smoke-level; accuracy claims in benchmarks)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["fedgat", "distgat", "fedgcn"])
+def test_run_federated_smoke(graph, method):
+    cfg = FederatedConfig(
+        method=method, num_clients=3, rounds=4, local_steps=2,
+        model=FedGATConfig(engine="direct", degree=8),
+    )
+    res = run_federated(graph, cfg)
+    assert len(res["test_curve"]) == 4
+    assert 0.0 <= res["best_test"] <= 1.0
+    if method == "fedgat":
+        assert res["comm"].download_scalars > 0
+
+
+def test_run_federated_aggregators(graph):
+    for agg in ("fedavg", "fedprox", "fedadam"):
+        cfg = FederatedConfig(
+            method="fedgat", num_clients=2, rounds=3, local_steps=1, aggregator=agg,
+            model=FedGATConfig(engine="direct", degree=8),
+        )
+        res = run_federated(graph, cfg)
+        assert np.isfinite(res["best_test"])
+
+
+def test_centralized_training_learns(graph):
+    res = train_centralized(graph, "gat", steps=120)
+    assert res["best_test"] > 0.5  # tiny SBM is easy; must beat chance (1/3)
+
+
+def test_single_client_fedgat_close_to_centralized_fedgat(graph):
+    """K=1, FedAvg is a no-op: federated loop must track centralised
+    training of the same approximate model."""
+    mcfg = FedGATConfig(engine="direct", degree=12)
+    fed = run_federated(
+        graph,
+        FederatedConfig(method="fedgat", num_clients=1, rounds=40, local_steps=1,
+                        model=mcfg, seed=5),
+    )
+    cen = train_centralized(graph, "fedgat", steps=40, mcfg=mcfg, seed=5)
+    assert abs(fed["best_test"] - cen["best_test"]) < 0.25

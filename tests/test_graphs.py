@@ -1,0 +1,113 @@
+"""Graph substrate: neighbour-list encoding, subgraphs, dataset invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs import DATASET_PRESETS, build_neighbor_lists, make_cora_like, pad_degree
+from repro.graphs.graph import make_graph, subgraph
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 100), st.integers(1, 16))
+def test_pad_degree(deg, mult):
+    p = pad_degree(deg, mult)
+    assert p >= deg and p % mult == 0 and p - deg < mult
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 1000), st.integers(4, 24))
+def test_neighbor_lists_roundtrip(seed, n):
+    rng = np.random.default_rng(seed)
+    adj = rng.random((n, n)) < 0.3
+    adj = adj | adj.T
+    np.fill_diagonal(adj, True)
+    nbr_idx, nbr_mask = build_neighbor_lists(adj, pad_multiple=4)
+    # every (i, j) adjacency appears exactly once in the padded lists
+    for i in range(n):
+        got = set(nbr_idx[i][nbr_mask[i]].tolist())
+        want = set(np.nonzero(adj[i])[0].tolist())
+        assert got == want
+    # padded entries are masked out
+    assert nbr_mask.shape == nbr_idx.shape
+    assert nbr_mask.sum() == adj.sum()
+
+
+@pytest.mark.parametrize("name", sorted(DATASET_PRESETS))
+def test_dataset_invariants(name):
+    g = make_cora_like(name, seed=0)
+    N, d, C = g.num_nodes, g.feature_dim, g.num_classes
+    assert g.labels.min() >= 0 and g.labels.max() < C
+    # Assumption 3: unit-norm features (zero rows allowed for all-dropped)
+    norms = np.linalg.norm(g.features, axis=1)
+    assert (norms <= 1.0 + 1e-5).all()
+    # splits disjoint
+    assert not (g.train_mask & g.val_mask).any()
+    assert not (g.train_mask & g.test_mask).any()
+    assert not (g.val_mask & g.test_mask).any()
+    # adjacency symmetric with self-loops
+    assert (g.adj == g.adj.T).all()
+    assert g.adj.diagonal().all()
+    # every node keeps its self-loop in the neighbour lists
+    self_present = (
+        (g.nbr_idx == np.arange(N)[:, None]) & g.nbr_mask
+    ).any(axis=1)
+    assert self_present.all()
+
+
+def test_dataset_deterministic():
+    a = make_cora_like("tiny", seed=3)
+    b = make_cora_like("tiny", seed=3)
+    np.testing.assert_array_equal(a.features, b.features)
+    np.testing.assert_array_equal(a.adj, b.adj)
+
+
+def test_subgraph_drops_external_edges():
+    g = make_cora_like("tiny", seed=0)
+    nodes = list(range(0, g.num_nodes, 2))
+    sg = subgraph(g, nodes)
+    assert sg.num_nodes == len(nodes)
+    # edges in sg correspond to edges in g between selected nodes
+    sel = np.asarray(nodes)
+    np.testing.assert_array_equal(
+        sg.adj, g.adj[np.ix_(sel, sel)] | np.eye(len(nodes), dtype=bool)
+    )
+
+
+def test_client_fraction_sampling():
+    """Algorithm 2's CS(t): partial participation still trains."""
+    from repro.core import FedGATConfig
+    from repro.federated import FederatedConfig, run_federated
+
+    g = make_cora_like("tiny", seed=0)
+    cfg = FederatedConfig(
+        method="fedgat", num_clients=4, rounds=5, local_steps=2,
+        client_fraction=0.5,
+        model=FedGATConfig(engine="direct", degree=8),
+    )
+    res = run_federated(g, cfg)
+    assert np.isfinite(res["best_test"])
+    assert len(res["test_curve"]) == 5
+
+
+def test_three_layer_fedgat():
+    """Paper §4 multi-layer: layer 1 approximate, layers 2..L exact."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import FedGATConfig, fedgat_forward, init_params, make_pack
+
+    g = make_cora_like("tiny", seed=0)
+    h = jnp.asarray(g.features)
+    nbr_idx, nbr_mask = jnp.asarray(g.nbr_idx), jnp.asarray(g.nbr_mask)
+    cfg = FedGATConfig(num_layers=3, degree=10, engine="vector")
+    params = init_params(jax.random.PRNGKey(0), g.feature_dim, g.num_classes, cfg)
+    assert len(params) == 3
+    coeffs = jnp.asarray(cfg.coeffs(), jnp.float32)
+    pack = make_pack(jax.random.PRNGKey(1), cfg, h, nbr_idx, nbr_mask)
+    logits = fedgat_forward(params, cfg, coeffs, pack, h, nbr_idx, nbr_mask)
+    assert logits.shape == (g.num_nodes, g.num_classes)
+    assert not bool(jnp.isnan(logits).any())
+    # exact 3-layer reference within approximation error
+    exact_cfg = FedGATConfig(num_layers=3, engine="exact")
+    logits_exact = fedgat_forward(params, exact_cfg, None, None, h, nbr_idx, nbr_mask)
+    assert float(jnp.abs(logits - logits_exact).max()) < 0.15

@@ -1,0 +1,246 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import cheb_attn, flash_attn, poly_attn, ref
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-5), jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _tol(dtype):
+    return TOL[jnp.bfloat16] if dtype == jnp.bfloat16 else TOL[jnp.float32]
+
+
+# ---------------------------------------------------------------------------
+# cheb_attn — the FedGAT aggregation kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,b,d,bn,bd", [
+    (8, 8, 8, 8, 8),
+    (32, 16, 64, 8, 32),
+    (64, 8, 128, 32, 128),
+    (128, 24, 32, 128, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cheb_attn_shapes(n, b, d, bn, bd, dtype):
+    key = jax.random.PRNGKey(n * 1000 + b)
+    x = jax.random.normal(key, (n, b), jnp.float32)
+    h = jax.random.normal(jax.random.PRNGKey(1), (n, b, d), jnp.float32).astype(dtype)
+    m = jax.random.bernoulli(jax.random.PRNGKey(2), 0.7, (n, b)).at[:, 0].set(True)
+    coeffs = jnp.asarray(np.random.default_rng(0).normal(size=9), jnp.float32)
+    got = cheb_attn(x, h, m.astype(jnp.float32), coeffs, block_n=bn, block_d=bd)
+    want = ref.cheb_attn_ref(x, h.astype(jnp.float32), m.astype(jnp.float32), coeffs)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), **_tol(dtype)
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(1, 4),      # n blocks of 8
+    st.integers(1, 3),      # b multiples of 8
+    st.integers(1, 8),      # degree
+    st.integers(0, 2**31 - 1),
+)
+def test_cheb_attn_property(nb, bb, degree, seed):
+    n, b, d = nb * 8, bb * 8, 16
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, b))
+    h = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, b, d))
+    m = jnp.ones((n, b))
+    coeffs = jax.random.normal(jax.random.PRNGKey(seed + 2), (degree + 1,))
+    got = cheb_attn(x, h, m, coeffs, block_n=8, block_d=8)
+    want = ref.cheb_attn_ref(x, h, m, coeffs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)
+
+
+def test_cheb_attn_constant_poly_is_mean():
+    """With e=1 (q=[1]), the kernel must compute the neighbourhood mean."""
+    n, b, d = 8, 8, 16
+    h = jax.random.normal(jax.random.PRNGKey(0), (n, b, d))
+    x = jax.random.normal(jax.random.PRNGKey(1), (n, b))
+    m = jnp.ones((n, b))
+    got = cheb_attn(x, h, m, jnp.asarray([1.0]), block_n=8, block_d=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(h.mean(axis=1)), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_attn
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,hd,bq,bk", [
+    (32, 16, 16, 16),
+    (64, 64, 32, 16),
+    (128, 128, 128, 64),
+    (96, 32, 32, 32),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attn_shapes(s, hd, bq, bk, causal):
+    B, H = 2, 2
+    ks = jax.random.split(jax.random.PRNGKey(s + hd), 3)
+    q = jax.random.normal(ks[0], (B, H, s, hd))
+    k = jax.random.normal(ks[1], (B, H, s, hd))
+    v = jax.random.normal(ks[2], (B, H, s, hd))
+    got = flash_attn(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    want = ref.flash_attn_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attn_dtypes(dtype):
+    B, H, S, hd = 1, 2, 64, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, H, S, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, H, S, hd)).astype(dtype)
+    got = flash_attn(q, k, v, block_q=32, block_k=32)
+    want = ref.flash_attn_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+def test_flash_attn_rows_convex():
+    """Output rows are convex combinations of V rows: bounded by V extremes."""
+    B, H, S, hd = 1, 1, 32, 8
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, S, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, H, S, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, H, S, hd))
+    out = flash_attn(q, k, v, block_q=16, block_k=16)
+    assert float(out.max()) <= float(v.max()) + 1e-5
+    assert float(out.min()) >= float(v.min()) - 1e-5
+
+
+# ---------------------------------------------------------------------------
+# poly_attn — FedGAT technique on sequences
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,hd,bq,bk", [(32, 16, 16, 16), (64, 64, 32, 32), (128, 32, 64, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_poly_attn_shapes(s, hd, bq, bk, causal):
+    B, H = 2, 2
+    ks = jax.random.split(jax.random.PRNGKey(s), 5)
+    q = jax.random.normal(ks[0], (B, H, s, hd))
+    k = jax.random.normal(ks[1], (B, H, s, hd))
+    v = jax.random.normal(ks[2], (B, H, s, hd))
+    a1 = jax.random.normal(ks[3], (H, hd)) * 0.1
+    a2 = jax.random.normal(ks[4], (H, hd)) * 0.1
+    from repro.core.chebyshev import attention_series
+
+    coeffs = jnp.asarray(attention_series(8, (-4.0, 4.0)), jnp.float32)
+    got = poly_attn(q, k, v, a1, a2, coeffs, causal=causal, block_q=bq, block_k=bk)
+    want = ref.poly_attn_ref(q, k, a1, a2, v, coeffs, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=5e-4)
+
+
+def test_poly_attn_matches_softmax_at_high_degree():
+    """With a high-degree series of exp(psi) and small scores, polynomial
+    attention approaches the exact exp-weighted aggregation (paper Thm 2-4
+    in sequence form)."""
+    B, H, S, hd = 1, 1, 32, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q = jax.random.normal(ks[0], (B, H, S, hd)) * 0.3
+    k = jax.random.normal(ks[1], (B, H, S, hd)) * 0.3
+    v = jax.random.normal(ks[2], (B, H, S, hd))
+    a1 = jax.random.normal(ks[3], (H, hd)) * 0.1
+    a2 = jax.random.normal(ks[4], (H, hd)) * 0.1
+    from repro.core.chebyshev import attention_series, default_score_fn
+
+    # exact additive-score attention with e = exp(leaky_relu(x))
+    sq = jnp.einsum("bhqd,hd->bhq", q, a1)
+    sk = jnp.einsum("bhkd,hd->bhk", k, a2)
+    x = sq[..., :, None] + sk[..., None, :]
+    e = jnp.exp(jnp.where(x >= 0, x, 0.2 * x)) * jnp.tril(jnp.ones((S, S)))[None, None]
+    want = jnp.einsum("bhqk,bhkd->bhqd", e, v) / e.sum(-1, keepdims=True)
+    # exp(LeakyReLU) has a first-derivative kink at 0 -> Theorem 2 applies
+    # with k=1: O(1/p) decay. Check convergence + a k=1-consistent bound.
+    errs = []
+    for p in (8, 16, 32):
+        coeffs = jnp.asarray(attention_series(p, (-4.0, 4.0)), jnp.float32)
+        got = poly_attn(q, k, v, a1, a2, coeffs, causal=True, block_q=16, block_k=16)
+        errs.append(float(jnp.abs(got - want).max()))
+    assert errs[2] < errs[0]
+    assert errs[2] < 2e-2
+
+
+# ---------------------------------------------------------------------------
+# kernel engine == direct engine in the FedGAT model
+# ---------------------------------------------------------------------------
+
+def test_kernel_engine_matches_direct():
+    from repro.core import FedGATConfig, fedgat_forward, init_params
+    from repro.graphs import make_cora_like
+
+    g = make_cora_like("tiny", seed=0)
+    h = jnp.asarray(g.features)
+    nbr_idx = jnp.asarray(g.nbr_idx)
+    nbr_mask = jnp.asarray(g.nbr_mask)
+    cfgd = FedGATConfig(degree=10, engine="direct")
+    cfgk = FedGATConfig(degree=10, engine="kernel")
+    params = init_params(jax.random.PRNGKey(1), g.feature_dim, g.num_classes, cfgd)
+    coeffs = jnp.asarray(cfgd.coeffs(), jnp.float32)
+    out_d = fedgat_forward(params, cfgd, coeffs, None, h, nbr_idx, nbr_mask)
+    out_k = fedgat_forward(params, cfgk, coeffs, None, h, nbr_idx, nbr_mask)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_d), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# wkv_chunked — TPU-native chunked RWKV6 recurrence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,hd,chunk", [(32, 8, 8), (64, 16, 16), (128, 64, 32), (48, 16, 16)])
+def test_wkv_chunked_matches_scan(s, hd, chunk):
+    from repro.kernels.wkv_chunk import wkv_chunked
+
+    BH = 3
+    ks = jax.random.split(jax.random.PRNGKey(s + hd), 6)
+    r = jax.random.normal(ks[0], (BH, s, hd))
+    k = jax.random.normal(ks[1], (BH, s, hd))
+    v = jax.random.normal(ks[2], (BH, s, hd))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (BH, s, hd)) + 1.0) * 0.99
+    u = jax.random.normal(ks[4], (hd,)) * 0.1
+    S0 = jax.random.normal(ks[5], (BH, hd, hd)) * 0.1
+    y, Sf = wkv_chunked(r, k, v, w, u, S0, chunk=chunk)
+    y_ref, S_ref = ref.wkv_ref(r, k, v, w, u, S0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(Sf), np.asarray(S_ref), rtol=1e-4, atol=1e-4)
+
+
+def test_wkv_chunked_strong_decay_envelope():
+    """Per-channel decays as low as 0.3 stay accurate at chunk 16 (the
+    1/P dynamic range bound documented in the kernel header)."""
+    from repro.kernels.wkv_chunk import wkv_chunked
+
+    BH, s, hd = 2, 32, 8
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    r = jax.random.normal(ks[0], (BH, s, hd))
+    k = jax.random.normal(ks[1], (BH, s, hd))
+    v = jax.random.normal(ks[2], (BH, s, hd))
+    w = jnp.full((BH, s, hd), 0.3)
+    u = jax.random.normal(ks[3], (hd,)) * 0.1
+    S0 = jnp.zeros((BH, hd, hd))
+    y, Sf = wkv_chunked(r, k, v, w, u, S0, chunk=16)
+    y_ref, S_ref = ref.wkv_ref(r, k, v, w, u, S0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 4))
+def test_wkv_chunked_property(seed, nchunks):
+    from repro.kernels.wkv_chunk import wkv_chunked
+
+    BH, hd, chunk = 2, 8, 8
+    s = nchunks * chunk
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    r = jax.random.normal(ks[0], (BH, s, hd))
+    k = jax.random.normal(ks[1], (BH, s, hd))
+    v = jax.random.normal(ks[2], (BH, s, hd))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (BH, s, hd))) * 0.98 + 0.01
+    u = jax.random.normal(ks[4], (hd,)) * 0.1
+    S0 = jnp.zeros((BH, hd, hd))
+    y, _ = wkv_chunked(r, k, v, w, u, S0, chunk=chunk)
+    y_ref, _ = ref.wkv_ref(r, k, v, w, u, S0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-3, atol=2e-3)

@@ -1,0 +1,78 @@
+"""Model-layer invariants (hypothesis property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import apply_rope, rmsnorm, init_rmsnorm, rope_freqs
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from([32, 64, 128]))
+def test_rope_preserves_norm(seed, hd):
+    """Rotations are orthogonal: per-head vector norms are invariant."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 6, 4, hd))
+    pos = jnp.broadcast_to(jnp.arange(6)[None], (2, 6))
+    y = apply_rope(x, pos, mode="standard")
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_rope_position_zero_is_identity():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 2, 64))
+    pos = jnp.zeros((1, 1), jnp.int32)
+    y = apply_rope(x, pos, mode="standard")
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+def test_rope_relative_property():
+    """Dot products depend only on relative position: q_i.k_j is invariant
+    under a common position shift."""
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 64))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 64))
+
+    def score(pi, pj):
+        qr = apply_rope(q, jnp.full((1, 1), pi), mode="standard")
+        kr = apply_rope(k, jnp.full((1, 1), pj), mode="standard")
+        return float(jnp.sum(qr * kr))
+
+    assert abs(score(3, 7) - score(103, 107)) < 1e-3
+    assert abs(score(3, 7) - score(3, 8)) > 1e-4  # but not absolute-invariant
+
+
+def test_rope_2d_rotates_half():
+    """ChatGLM 2D mode: second half of head_dim passes through."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 4, 2, 64))
+    pos = jnp.broadcast_to(jnp.arange(4)[None], (1, 4))
+    y = apply_rope(x, pos, mode="2d")
+    np.testing.assert_array_equal(np.asarray(x[..., 32:]), np.asarray(y[..., 32:]))
+    assert not np.allclose(np.asarray(x[..., :32][0, 1:]), np.asarray(y[..., :32][0, 1:]))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 1000), st.floats(0.5, 10.0))
+def test_rmsnorm_scale_invariance(seed, scale):
+    """rmsnorm(c*x) == rmsnorm(x) for any positive scalar c."""
+    d = 32
+    p = init_rmsnorm(d, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, d))
+    a = rmsnorm(p, x)
+    b = rmsnorm(p, x * scale)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_rmsnorm_unit_rms():
+    p = init_rmsnorm(64, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 64)) * 7.0
+    y = np.asarray(rmsnorm(p, x))
+    rms = np.sqrt((y**2).mean(axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_rope_freqs_monotone():
+    f = np.asarray(rope_freqs(128))
+    assert (np.diff(f) < 0).all() and f[0] == 1.0

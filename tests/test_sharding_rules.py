@@ -1,0 +1,81 @@
+"""Sharding-rule unit tests (pure spec logic — no multi-device needed;
+NamedSharding construction only requires the mesh object, built on 1 CPU
+device via subprocess-free spec inspection)."""
+import os
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.configs import get_config, INPUT_SHAPES
+from repro.launch import sharding as shd
+from repro.launch.specs import cache_specs, param_specs
+
+mesh = jax.make_mesh((4, 4), ("data", "model"))
+
+# --- dense param rules ---
+cfg = get_config("yi-6b")
+ps = param_specs(cfg, INPUT_SHAPES["train_4k"])
+sh = shd.param_shardings(mesh, ps)
+def spec_of(path):
+    node = sh
+    for k in path:
+        node = node[k]
+    return node.spec
+# embedding: vocab-sharded
+assert spec_of(("embed", "table")) == P("model", None), spec_of(("embed", "table"))
+# attention projections: column-parallel (layer-stack leading dim replicated)
+assert spec_of(("layers", "attn", "wq", "w")) == P(None, None, "model")
+assert spec_of(("layers", "attn", "wo", "w")) == P(None, "model", None)
+# mlp
+assert spec_of(("layers", "mlp", "w_gate", "w")) == P(None, None, "model")
+assert spec_of(("layers", "mlp", "w_down", "w")) == P(None, "model", None)
+# norms replicated
+assert spec_of(("layers", "ln1", "scale")) == P(None, None)
+
+# --- moe expert parallelism ---
+cfgm = get_config("granite-moe-1b-a400m")
+psm = param_specs(cfgm, INPUT_SHAPES["train_4k"])
+shm = shd.param_shardings(mesh, psm)
+node = shm
+for k in ("layers", "moe", "experts", "w_gate", "w"):
+    node = node[k]
+assert node.spec == P(None, "model", None, None), node.spec  # (L, E, d, ff)
+
+# --- zero1 extends model dim with data axes ---
+z = shd.opt_shardings_zero1(mesh, ps)
+node = z
+for k in ("layers", "mlp", "w_gate", "w"):
+    node = node[k]
+assert node.spec == P(None, None, ("model", "data")), node.spec
+
+# --- decode cache: batch-sharded when divisible, KV heads on model ---
+c = cache_specs(cfg, INPUT_SHAPES["decode_32k"])
+csh = shd.cache_shardings(mesh, cfg, c)
+assert csh.kv.k.spec == P(None, "data", None, "model", None), csh.kv.k.spec
+
+# --- long_500k (B=1): window context-parallel over data ---
+c1 = cache_specs(cfg, INPUT_SHAPES["long_500k"])
+csh1 = shd.cache_shardings(mesh, cfg, c1)
+assert csh1.kv.k.spec == P(None, None, "data", "model", None), csh1.kv.k.spec
+
+# --- batch spec replicates non-divisible batch ---
+assert shd.batch_spec(mesh, (1, 8)) == P(None, None)
+assert shd.batch_spec(mesh, (8, 16)) == P("data", None)
+print("SHARDING_OK")
+"""
+
+
+def test_sharding_rules():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env, capture_output=True, text=True,
+        timeout=300,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARDING_OK" in out.stdout
