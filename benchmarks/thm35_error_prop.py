@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FedGATConfig, fedgat_forward, gat_layer_nbr, init_params, poly_gat_layer
+from repro.core import FedGAT, FedGATConfig, gat_layer_nbr, init_params, poly_gat_layer
 from repro.core.poly_attention import edge_scores, eval_series, head_projections
 from repro.graphs import make_cora_like
 
@@ -28,14 +28,13 @@ def run(fast: bool = False, seed: int = 0) -> List[Dict]:
     e_exact = jnp.exp(jnp.where(x >= 0, x, 0.2 * x))
     mask = nbr_mask[None].astype(jnp.float32)
 
-    exact_cfg = FedGATConfig(engine="exact")
-    logits_exact = fedgat_forward(params, exact_cfg, None, None, h, nbr_idx, nbr_mask)
+    logits_exact = FedGAT(FedGATConfig(engine="exact")).apply(params, g)
     layer_exact = gat_layer_nbr(params[0], h, nbr_idx, nbr_mask, concat=True)
 
     rows = []
     for p in degrees:
-        cfg = FedGATConfig(degree=p, basis="chebyshev", engine="direct")
-        coeffs = jnp.asarray(cfg.coeffs(), jnp.float32)
+        model = FedGAT(FedGATConfig(degree=p, basis="chebyshev", engine="direct"))
+        coeffs = model.coeffs
         e_hat = eval_series(coeffs, x, "chebyshev", DOMAIN)
         eps = float(jnp.max(jnp.abs(e_hat - e_exact) * mask))
 
@@ -49,7 +48,7 @@ def run(fast: bool = False, seed: int = 0) -> List[Dict]:
         layer_err = float(jnp.max(jnp.linalg.norm(
             (layer_hat - layer_exact).reshape(g.num_nodes, -1), axis=-1)))
 
-        logits = fedgat_forward(params, cfg, coeffs, None, h, nbr_idx, nbr_mask)
+        logits = model.apply(params, g)
         logit_err = float(jnp.max(jnp.abs(logits - logits_exact)))
 
         rows.append({"degree": p, "eps_score": eps, "alpha_err": alpha_err,

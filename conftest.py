@@ -1,0 +1,20 @@
+"""Root pytest config.
+
+Puts ``src/`` on ``sys.path`` (belt-and-braces next to the ``pythonpath``
+ini option) and installs the deterministic ``hypothesis`` fallback when the
+real library is unavailable, so hermetic containers without the dependency
+still collect and run the property-test files.
+"""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(__file__), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    from repro._compat import hypothesis_fallback
+
+    hypothesis_fallback.install()

@@ -14,13 +14,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
+    FedGAT,
     FedGATConfig,
-    fedgat_forward,
     gat_layer_nbr,
     init_params,
-    make_pack,
     poly_gat_layer,
     precompute_pack,
+    registered_engines,
 )
 from repro.graphs import make_cora_like
 
@@ -32,15 +32,12 @@ def main() -> int:
     params = init_params(jax.random.PRNGKey(0), g.feature_dim, g.num_classes,
                          FedGATConfig())
 
-    print("=== engine agreement (same logits from all engines) ===")
+    print(f"=== engine agreement (registry: {registered_engines()}) ===")
     outs = {}
     for engine in ("direct", "matrix", "vector", "kernel"):
-        cfg = FedGATConfig(degree=12, engine=engine)
-        coeffs = jnp.asarray(cfg.coeffs(), jnp.float32)
-        pack = make_pack(jax.random.PRNGKey(1), cfg, h, nbr_idx, nbr_mask)
-        outs[engine] = np.asarray(
-            fedgat_forward(params, cfg, coeffs, pack, h, nbr_idx, nbr_mask)
-        )
+        model = FedGAT(FedGATConfig(degree=12, engine=engine))
+        model.precommunicate(jax.random.PRNGKey(1), g)   # the ONE comm round
+        outs[engine] = np.asarray(model.apply(params, g))
         diff = np.abs(outs[engine] - outs["direct"]).max()
         print(f"  {engine:7s} max |logits - direct| = {diff:.2e}")
 

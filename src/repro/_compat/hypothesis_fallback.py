@@ -1,0 +1,106 @@
+"""Deterministic stand-in for the subset of ``hypothesis`` the tests use.
+
+The test-suite declares ``hypothesis`` as a test dependency (pyproject), but
+hermetic containers may not have it baked in. Rather than dying at
+collection with ``ModuleNotFoundError``, :func:`install` registers a
+minimal, deterministic replacement in ``sys.modules``: ``@given`` degrades
+from randomised property testing to a fixed sweep of pseudo-random examples
+seeded by the test name, and ``@settings`` keeps its ``max_examples`` knob.
+
+Only the API surface used in ``tests/`` is provided: ``given``,
+``settings`` and the ``integers`` / ``floats`` / ``sampled_from`` /
+``lists`` strategies, positional-only, applied under an ``@settings``
+decorator.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+from typing import Any, Callable, List
+
+DEFAULT_MAX_EXAMPLES = 10
+
+
+class Strategy:
+    """A draw rule; ``example(rng)`` produces one deterministic value."""
+
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> Strategy:
+    return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(elements) -> Strategy:
+    elems = list(elements)
+    return Strategy(lambda rng: elems[rng.randrange(len(elems))])
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+    def draw(rng: random.Random) -> List[Any]:
+        size = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(size)]
+
+    return Strategy(draw)
+
+
+def given(*strategies: Strategy):
+    def decorator(fn):
+        n_params = len(inspect.signature(fn).parameters)
+        if n_params != len(strategies):
+            raise TypeError(
+                f"fallback @given: {fn.__qualname__} takes {n_params} parameters "
+                f"but {len(strategies)} strategies were given — pytest fixtures "
+                "cannot be mixed with @given under the fallback"
+            )
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(fn.__qualname__)
+            for _ in range(n):
+                drawn = [s.example(rng) for s in strategies]
+                fn(*args, *drawn, **kwargs)
+
+        # Hide the wrapped signature so pytest does not treat the strategy
+        # parameters as fixtures.
+        del wrapper.__wrapped__
+        return wrapper
+
+    return decorator
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+    def decorator(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return decorator
+
+
+def install() -> None:
+    """Register the fallback as ``hypothesis`` / ``hypothesis.strategies``."""
+    if "hypothesis" in sys.modules:  # real library (or prior install) wins
+        return
+    mod = types.ModuleType("hypothesis")
+    mod.__doc__ = __doc__
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "lists"):
+        setattr(st, name, globals()[name])
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    mod.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

@@ -1,6 +1,20 @@
 from repro.core import chebyshev
+from repro.core.engine import (
+    Engine,
+    UnknownEngineError,
+    get_engine,
+    register_engine,
+    registered_engines,
+    unregister_engine,
+)
 from repro.core.fedgat_matrix import FedGATPack, fedgat_layer_matrix, precompute_pack
-from repro.core.fedgat_model import FedGATConfig, fedgat_forward, init_params, make_pack
+from repro.core.fedgat_model import (
+    FedGAT,
+    FedGATConfig,
+    fedgat_forward,
+    init_params,
+    make_pack,
+)
 from repro.core.fedgat_vector import VectorPack, fedgat_layer_vector, precompute_vector_pack
 from repro.core.gat import (
     gat_forward,

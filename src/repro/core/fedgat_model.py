@@ -5,7 +5,7 @@ approximate FedGAT update from the pre-communicated pack. Layers l > 1 use
 the exact GAT update on layer-(l-1) embeddings, which the paper permits
 clients to exchange (they are highly non-linear in the inputs).
 
-Engines for layer 1:
+Layer-1 engines are pluggable (see repro/core/engine.py); the seeds are:
   * "matrix" — Matrix FedGAT (paper §4, Algorithm 1/2)
   * "vector" — Vector FedGAT (paper Appendix F)
   * "direct" — the mathematical oracle (same numbers, no pack; used for
@@ -13,10 +13,19 @@ Engines for layer 1:
   * "kernel" — fused Pallas polynomial-attention kernel (interpret mode on
                 CPU, TPU-tiled BlockSpecs; see repro/kernels)
   * "exact"  — plain GAT (degenerate engine, for baselines)
+
+Two API levels:
+  * the :class:`FedGAT` facade — owns the config, the engine, the series
+    coefficients (computed once) and the pack lifecycle:
+    ``model.init(key, graph)``, ``model.precommunicate(key, graph)``,
+    ``model.apply(params, graph, nbr_mask)``;
+  * the original free functions (``init_params`` / ``make_pack`` /
+    ``fedgat_forward``) — kept as thin wrappers over the same registry for
+    backwards compatibility.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Optional, Sequence, Tuple
 
 import jax
@@ -24,10 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import chebyshev
-from repro.core.fedgat_matrix import FedGATPack, fedgat_layer_matrix, precompute_pack
-from repro.core.fedgat_vector import VectorPack, fedgat_layer_vector, precompute_vector_pack
+from repro.core.engine import Engine, get_engine
 from repro.core.gat import elu, gat_layer_nbr, init_gat_params
-from repro.core.poly_attention import poly_gat_layer
 
 Array = jax.Array
 
@@ -41,7 +48,7 @@ class FedGATConfig:
     degree: int = 16                  # Chebyshev truncation degree p
     domain: Tuple[float, float] = (-4.0, 4.0)
     basis: str = "power"              # "power" (paper) | "chebyshev" (stable)
-    engine: str = "matrix"            # layer-1 engine
+    engine: str = "matrix"            # layer-1 engine (registry name)
     leaky_slope: float = 0.2
     r: float = 1.7                    # projector obfuscation constant
 
@@ -71,52 +78,17 @@ def init_params(key: Array, d_in: int, num_classes: int, cfg: FedGATConfig):
     return params
 
 
-def make_pack(
-    key: Array, cfg: FedGATConfig, h: Array, nbr_idx: Array, nbr_mask: Array
-) -> Optional[Any]:
-    """Pre-training communication round (engine-dependent payload)."""
-    if cfg.engine == "matrix":
-        return precompute_pack(key, h, nbr_idx, nbr_mask, cfg.r)
-    if cfg.engine == "vector":
-        return precompute_vector_pack(key, h, nbr_idx, nbr_mask)
-    return None  # direct / kernel / exact need no pack
-
-
-def fedgat_forward(
+def _layered_forward(
+    engine: Engine,
     params: Sequence[Any],
-    cfg: FedGATConfig,
-    coeffs: Array,
+    coeffs: Optional[Array],
     pack: Optional[Any],
     h: Array,
     nbr_idx: Array,
     nbr_mask: Array,
 ) -> Array:
-    """Two-layer FedGAT forward -> class logits (N, C)."""
-    p1 = params[0]
-    if cfg.engine == "matrix":
-        x = fedgat_layer_matrix(
-            p1, pack, h, coeffs, basis=cfg.basis, domain=cfg.domain, concat=True
-        )
-    elif cfg.engine == "vector":
-        x = fedgat_layer_vector(
-            p1, pack, h, coeffs, basis=cfg.basis, domain=cfg.domain, concat=True
-        )
-    elif cfg.engine == "direct":
-        x = poly_gat_layer(
-            p1, coeffs, h, nbr_idx, nbr_mask,
-            basis=cfg.basis, domain=cfg.domain, concat=True,
-        )
-    elif cfg.engine == "kernel":
-        from repro.kernels import ops as kernel_ops  # lazy: pallas import
-
-        x = kernel_ops.cheb_attn_layer(
-            p1, coeffs, h, nbr_idx, nbr_mask,
-            basis=cfg.basis, domain=cfg.domain, concat=True,
-        )
-    elif cfg.engine == "exact":
-        x = gat_layer_nbr(p1, h, nbr_idx, nbr_mask, concat=True)
-    else:
-        raise ValueError(f"unknown engine {cfg.engine!r}")
+    """Engine layer 1 + exact GAT layers l > 1 -> class logits (N, C)."""
+    x = engine.apply(params[0], pack, coeffs, h, nbr_idx, nbr_mask, concat=True)
     x = elu(x)
     # Layers > 1: exact GAT update (paper: post-layer-1 embeddings shareable).
     for li in range(1, len(params)):
@@ -125,3 +97,101 @@ def fedgat_forward(
         if not last:
             x = elu(x)
     return x
+
+
+class FedGAT:
+    """Model facade: config + engine + coefficients + pack lifecycle.
+
+    Typical use::
+
+        model = FedGAT(FedGATConfig(engine="vector", degree=16))
+        params = model.init(key, graph)
+        model.precommunicate(pack_key, graph)   # the ONE comm round
+        logits = model.apply(params, graph)     # full-graph nbr_mask
+        logits = model.apply(params, graph, client_mask)
+
+    Series coefficients are computed once at construction (not per call);
+    the pre-training pack is computed once by :meth:`precommunicate` and
+    reused by every :meth:`apply`.
+    """
+
+    def __init__(self, cfg: Optional[FedGATConfig] = None, **overrides):
+        if cfg is None:
+            cfg = FedGATConfig(**overrides)
+        elif overrides:
+            raise TypeError("pass either a FedGATConfig or field overrides, not both")
+        self.cfg = cfg
+        self.engine: Engine = get_engine(cfg.engine)(cfg)
+        self.coeffs: Optional[Array] = (
+            jnp.asarray(cfg.coeffs(), jnp.float32) if self.engine.needs_coeffs else None
+        )
+        self.pack: Optional[Any] = None
+        self._pack_graph: Optional[Any] = None  # which graph the pack belongs to
+
+    def _graph_arrays(self, graph) -> Tuple[Array, Array, Array]:
+        return (
+            jnp.asarray(graph.features),
+            jnp.asarray(graph.nbr_idx),
+            jnp.asarray(graph.nbr_mask),
+        )
+
+    def init(self, key: Array, graph):
+        """Initialise GAT parameters for ``graph``'s feature/class dims."""
+        return init_params(key, graph.feature_dim, graph.num_classes, self.cfg)
+
+    def precommunicate(self, key: Array, graph) -> Optional[Any]:
+        """The one-shot pre-training communication round; stores the pack."""
+        h, nbr_idx, nbr_mask = self._graph_arrays(graph)
+        self.pack = self.engine.precompute(key, h, nbr_idx, nbr_mask)
+        self._pack_graph = graph
+        return self.pack
+
+    def apply(self, params: Sequence[Any], graph, nbr_mask: Optional[Array] = None) -> Array:
+        """Forward pass -> class logits (N, C).
+
+        ``nbr_mask`` restricts edge visibility (e.g. a client's view);
+        defaults to the full-graph mask.
+        """
+        if self.engine.needs_pack:
+            if self.pack is None:
+                raise RuntimeError(
+                    f"engine {self.cfg.engine!r} needs a pack: call "
+                    "model.precommunicate(key, graph) before model.apply(...)"
+                )
+            if graph is not self._pack_graph:
+                raise RuntimeError(
+                    f"engine {self.cfg.engine!r}: the stored pack was "
+                    "precommunicated for a different graph object; call "
+                    "model.precommunicate(key, graph) for this graph first"
+                )
+        h, nbr_idx, full_mask = self._graph_arrays(graph)
+        if nbr_mask is None:
+            nbr_mask = full_mask
+        return _layered_forward(
+            self.engine, params, self.coeffs, self.pack, h, nbr_idx, nbr_mask
+        )
+
+
+# ---------------------------------------------------------------------------
+# Backwards-compatible free functions (thin wrappers over the registry)
+# ---------------------------------------------------------------------------
+
+def make_pack(
+    key: Array, cfg: FedGATConfig, h: Array, nbr_idx: Array, nbr_mask: Array
+) -> Optional[Any]:
+    """Pre-training communication round (engine-dependent payload)."""
+    return get_engine(cfg.engine)(cfg).precompute(key, h, nbr_idx, nbr_mask)
+
+
+def fedgat_forward(
+    params: Sequence[Any],
+    cfg: FedGATConfig,
+    coeffs: Optional[Array],
+    pack: Optional[Any],
+    h: Array,
+    nbr_idx: Array,
+    nbr_mask: Array,
+) -> Array:
+    """Multi-layer FedGAT forward -> class logits (N, C)."""
+    engine = get_engine(cfg.engine)(cfg)
+    return _layered_forward(engine, params, coeffs, pack, h, nbr_idx, nbr_mask)

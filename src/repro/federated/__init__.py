@@ -7,7 +7,13 @@ from repro.federated.partition import (
     dirichlet_partition,
     l_hop_sizes,
 )
-from repro.federated.trainer import FederatedConfig, run_federated, train_centralized
+from repro.federated.trainer import (
+    FederatedConfig,
+    Trainer,
+    best_metrics,
+    run_federated,
+    train_centralized,
+)
 
 __all__ = [
     "fedavg",
@@ -22,6 +28,8 @@ __all__ = [
     "dirichlet_partition",
     "l_hop_sizes",
     "FederatedConfig",
+    "Trainer",
+    "best_metrics",
     "run_federated",
     "train_centralized",
 ]

@@ -78,3 +78,27 @@ def matrix_comm_cost(g: Graph, part: Partition, num_layers: int = 2) -> CommRepo
 
 def vector_comm_cost(g: Graph, part: Partition, num_layers: int = 2) -> CommReport:
     return _comm_cost(g, part, "vector", num_layers)
+
+
+# Cost-model name (Engine.comm_cost_model) -> meter. None = no pack is
+# communicated. "direct"/"kernel" declare "matrix": they simulate exactly
+# the matrix protocol without materialising the pack.
+COMM_COST_MODELS = {
+    "matrix": matrix_comm_cost,
+    "vector": vector_comm_cost,
+    "none": None,
+}
+
+
+def comm_cost_for_engine(engine: str):
+    """Cost meter for a registered engine, per its declared comm_cost_model."""
+    from repro.core.engine import get_engine
+
+    model = get_engine(engine).comm_cost_model
+    try:
+        return COMM_COST_MODELS[model]
+    except KeyError:
+        raise ValueError(
+            f"engine {engine!r} declares unknown comm_cost_model {model!r}: "
+            f"known models are {sorted(COMM_COST_MODELS)}"
+        ) from None

@@ -1,4 +1,4 @@
-"""shard_map federated execution: clients mapped onto a mesh axis.
+"""shard_map federated backend: clients mapped onto a mesh axis.
 
 This is the TPU-native realisation of the paper's communication pattern
 (DESIGN.md §3): each device shard holds ONE client's state; the only
@@ -12,87 +12,73 @@ No feature tensors cross clients during training — exactly the paper's
 guarantee — and the whole R-round schedule compiles into a single XLA
 program with a ``lax.scan`` over rounds.
 
-The vmap trainer (trainer.py) and this shard_map runner share the local
-update math; tests assert they produce identical parameter trajectories.
+This backend is reached through the unified entry
+(``run_federated(g, cfg, backend="shard_map")`` / ``Trainer``); it shares
+the model construction, local-update math and result schema with the vmap
+backend (trainer.py), and tests assert the two produce identical metric
+trajectories.
 """
 from __future__ import annotations
 
-from functools import partial
+import time
 from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.fedgat_model import fedgat_forward, init_params, make_pack, FedGATConfig
-from repro.core.gat import masked_accuracy, masked_cross_entropy
-from repro.federated.partition import client_neighbor_masks, client_train_masks, dirichlet_partition
-from repro.federated.trainer import FederatedConfig
+from repro._compat.jax_compat import shard_map
+from repro.core.gat import masked_accuracy
+from repro.federated.partition import dirichlet_partition
+from repro.federated.trainer import (
+    FederatedConfig,
+    build_forward,
+    build_result,
+    client_masks,
+    make_local_update,
+    make_loss_fn,
+    run_federated,
+)
 from repro.graphs.graph import Graph
-from repro.optim.adamw import adam_init, adam_update
+from repro.optim.adamw import adam_init
 
 
-def run_federated_sharded(g: Graph, cfg: FederatedConfig, mesh: Mesh | None = None) -> Dict[str, Any]:
-    """FedGAT/DistGAT rounds with clients sharded over a mesh axis."""
+def _client_mesh(num_clients: int) -> Mesh:
+    devs = jax.devices()
+    if len(devs) < num_clients:
+        raise ValueError(
+            f"need >= {num_clients} devices for {num_clients} clients, have "
+            f"{len(devs)} (set XLA_FLAGS=--xla_force_host_platform_device_count=...)"
+        )
+    return Mesh(np.array(devs[:num_clients]), ("clients",))
+
+
+def _run_shard_map(g: Graph, cfg: FederatedConfig, mesh: Mesh | None = None) -> Dict[str, Any]:
+    """FedGAT/DistGAT/FedGCN rounds with clients sharded over a mesh axis."""
     K = cfg.num_clients
+    if cfg.aggregator == "fedadam":
+        raise ValueError("shard_map backend supports fedavg/fedprox aggregation")
+    if cfg.client_fraction < 1.0:
+        raise ValueError("shard_map backend runs all clients every round")
     if mesh is None:
-        devs = np.array(jax.devices()[:K])
-        if len(devs) < K:
-            raise ValueError(
-                f"need >= {K} devices for {K} clients, have {len(jax.devices())} "
-                "(set XLA_FLAGS=--xla_force_host_platform_device_count=...)"
-            )
-        mesh = Mesh(devs, ("clients",))
+        mesh = _client_mesh(K)
 
+    t0 = time.time()
     key = jax.random.PRNGKey(cfg.seed)
     k_pack, k_init = jax.random.split(key)
     part = dirichlet_partition(g.labels, K, cfg.beta, cfg.seed)
 
-    h = jnp.asarray(g.features)
-    nbr_idx = jnp.asarray(g.nbr_idx)
-    nbr_mask = jnp.asarray(g.nbr_mask)
+    nb_masks, tr_masks = client_masks(cfg, g, part)
+    init_fn, forward = build_forward(cfg, g, k_pack)
+    global_params = init_fn(k_init)
+
     labels = jnp.asarray(g.labels)
-
-    if cfg.method == "distgat":
-        mcfg = FedGATConfig(
-            hidden=cfg.model.hidden, heads=cfg.model.heads,
-            out_heads=cfg.model.out_heads, engine="exact",
-        )
-        nb_masks = jnp.asarray(client_neighbor_masks(g, part))
-    elif cfg.method == "fedgat":
-        mcfg = cfg.model
-        nb_masks = jnp.broadcast_to(nbr_mask[None], (K,) + nbr_mask.shape)
-    else:
-        raise ValueError("sharded runner supports fedgat/distgat")
-
-    coeffs = jnp.asarray(mcfg.coeffs(), jnp.float32) if mcfg.engine != "exact" else None
-    pack = make_pack(k_pack, mcfg, h, nbr_idx, nbr_mask)  # one-shot comm round
-    tr_masks = jnp.asarray(client_train_masks(g, part))
-    global_params = init_params(k_init, g.feature_dim, g.num_classes, mcfg)
-
+    nbr_mask = jnp.asarray(g.nbr_mask)
     val_mask = jnp.asarray(g.val_mask)
     test_mask = jnp.asarray(g.test_mask)
 
-    def forward(params, nb_mask):
-        return fedgat_forward(params, mcfg, coeffs, pack, h, nbr_idx, nb_mask)
-
-    def loss_fn(params, nb_mask, tr_mask):
-        return masked_cross_entropy(forward(params, nb_mask), labels, tr_mask)
-
-    def local_round(gparams, opt_state, nb_mask, tr_mask):
-        def one(carry, _):
-            params, opt = carry
-            grads = jax.grad(loss_fn)(params, nb_mask, tr_mask)
-            params, opt = adam_update(
-                grads, opt, params, cfg.lr, weight_decay=cfg.weight_decay
-            )
-            return (params, opt), None
-
-        (params, opt_state), _ = jax.lax.scan(
-            one, (gparams, opt_state), None, length=cfg.local_steps
-        )
-        return params, opt_state
+    local_update = make_local_update(make_loss_fn(forward, labels), cfg)
 
     def shard_body(nb_masks_s, tr_masks_s, gparams):
         """Runs on one shard = one client. Leading axis of masks is size 1."""
@@ -102,7 +88,7 @@ def run_federated_sharded(g: Graph, cfg: FederatedConfig, mesh: Mesh | None = No
 
         def round_fn(carry, _):
             gp, opt = carry
-            local_params, opt = local_round(gp, opt, nb_mask, tr_mask)
+            local_params, opt = local_update(gp, opt, nb_mask, tr_mask)
             # FedAvg: the ONLY training-time cross-client collective.
             new_global = jax.tree.map(
                 lambda p: jax.lax.pmean(p, "clients"), local_params
@@ -119,24 +105,22 @@ def run_federated_sharded(g: Graph, cfg: FederatedConfig, mesh: Mesh | None = No
 
     spec_clients = P("clients")
     fn = jax.jit(
-        jax.shard_map(
+        shard_map(
             shard_body,
             mesh=mesh,
             in_specs=(spec_clients, spec_clients, P()),
             out_specs=(P(), P(), P()),
-            check_vma=False,
         )
     )
     gp, vas, tas = fn(nb_masks, tr_masks, global_params)
     val_curve = [float(x) for x in np.asarray(vas)]
     test_curve = [float(x) for x in np.asarray(tas)]
-    best_i = int(np.argmax(val_curve))
-    return {
-        "params": gp,
-        "val_curve": val_curve,
-        "test_curve": test_curve,
-        "best_val": val_curve[best_i],
-        "best_test": test_curve[best_i],
-        "final_test": test_curve[-1],
-        "mesh": mesh,
-    }
+    return build_result(
+        cfg=cfg, params=gp, val_curve=val_curve, test_curve=test_curve,
+        part=part, g=g, seconds=time.time() - t0, mesh=mesh,
+    )
+
+
+def run_federated_sharded(g: Graph, cfg: FederatedConfig, mesh: Mesh | None = None) -> Dict[str, Any]:
+    """Backwards-compatible wrapper for the shard_map backend."""
+    return run_federated(g, cfg, backend="shard_map", mesh=mesh)

@@ -1,16 +1,24 @@
-"""Federated training loop (paper Algorithm 2).
+"""Unified federated training entry (paper Algorithm 2).
 
 The simulation is *protocol-faithful*: what distinguishes clients is (a)
 which training labels they hold and (b) which edges they may see —
 FedGAT/FedGCN clients see cross-client information only through the
 pre-training communication (packs / exact aggregates), DistGAT clients have
-cross-client edges dropped. Local updates run on every client in parallel
-(vmap over a stacked client axis; see sharded.py for the shard_map/mesh
-version of the same layout), followed by FedAvg/FedProx/FedAdam
-aggregation.
+cross-client edges dropped. Local updates run on every client in parallel,
+followed by FedAvg/FedProx/FedAdam aggregation.
+
+Two execution backends realise the same schedule (``FederatedConfig.backend``):
+  vmap       — clients stacked on a batch axis of one device (default)
+  shard_map  — one client per device shard on a mesh axis (sharded.py)
+
+Both are driven through :class:`Trainer` (``run_federated`` is a thin
+wrapper) and return the same result schema; the local-update math
+(:func:`make_local_update`), model construction (:func:`build_forward`) and
+best-checkpoint rule (:func:`best_metrics`) are shared, so the backends
+cannot drift apart.
 
 Supported methods:
-  fedgat   — the paper's algorithm (engine: matrix | vector | direct)
+  fedgat   — the paper's algorithm (engine: any registered layer-1 engine)
   distgat  — GAT, cross-client edges dropped, FedAvg (baseline)
   fedgcn   — FedGCN (Yao et al. 2023): exact pre-communicated aggregates,
              i.e. mathematically a GCN on the full graph with local losses
@@ -19,19 +27,20 @@ Supported methods:
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fedgat_model import FedGATConfig, fedgat_forward, init_params, make_pack
+from repro.core.fedgat_model import FedGAT, FedGATConfig
 from repro.core.gat import masked_accuracy, masked_cross_entropy
 from repro.core.gcn import gcn_forward, init_gcn_params, normalized_adjacency
 from repro.federated import comm as comm_mod
 from repro.federated.aggregation import fedadam_server, fedavg, fedprox_grad
 from repro.federated.partition import (
+    Partition,
     client_neighbor_masks,
     client_train_masks,
     dirichlet_partition,
@@ -41,10 +50,13 @@ from repro.optim.adamw import adam_init, adam_update
 
 Array = jax.Array
 
+BACKENDS = ("vmap", "shard_map")
+
 
 @dataclass(frozen=True)
 class FederatedConfig:
     method: str = "fedgat"            # fedgat | distgat | fedgcn
+    backend: str = "vmap"             # vmap | shard_map
     num_clients: int = 10
     beta: float = 1.0                 # Dirichlet: 1 = non-iid, 1e4 = iid
     rounds: int = 60
@@ -60,34 +72,43 @@ class FederatedConfig:
     gcn_hidden: int = 16
 
 
-def _as_jnp(g: Graph):
-    return (
-        jnp.asarray(g.features),
-        jnp.asarray(g.nbr_idx),
-        jnp.asarray(g.nbr_mask),
-        jnp.asarray(g.labels),
-    )
+# ---------------------------------------------------------------------------
+# Shared building blocks (both backends use exactly these)
+# ---------------------------------------------------------------------------
+
+def method_model_config(cfg: FederatedConfig) -> FedGATConfig:
+    """The model config a federated method actually trains.
+
+    DistGAT is the same architecture with the exact layer-1 engine — derived
+    with ``dataclasses.replace`` so every other field (num_layers,
+    leaky_slope, r, ...) is preserved.
+    """
+    if cfg.method == "distgat":
+        return replace(cfg.model, engine="exact")
+    return cfg.model
 
 
-def _build_forward(cfg: FederatedConfig, g: Graph, key: Array):
-    """Returns (init_fn, forward(params, nbr_mask) -> logits, static pack)."""
-    h, nbr_idx, nbr_mask, _ = _as_jnp(g)
+def build_forward(
+    cfg: FederatedConfig, g: Graph, key: Array
+) -> Tuple[Callable, Callable]:
+    """Returns (init_fn, forward(params, nbr_mask) -> logits).
+
+    For fedgat/distgat this wraps a :class:`FedGAT` facade (coefficients
+    computed once; the one-shot pack communicated here, under ``key``).
+    """
     if cfg.method in ("fedgat", "distgat"):
-        mcfg = cfg.model if cfg.method == "fedgat" else FedGATConfig(
-            hidden=cfg.model.hidden, heads=cfg.model.heads,
-            out_heads=cfg.model.out_heads, engine="exact",
-        )
-        coeffs = jnp.asarray(mcfg.coeffs(), jnp.float32) if mcfg.engine != "exact" else None
-        pack = make_pack(key, mcfg, h, nbr_idx, nbr_mask)
+        model = FedGAT(method_model_config(cfg))
+        model.precommunicate(key, g)
 
         def init_fn(k):
-            return init_params(k, g.feature_dim, g.num_classes, mcfg)
+            return model.init(k, g)
 
         def forward(params, nb_mask):
-            return fedgat_forward(params, mcfg, coeffs, pack, h, nbr_idx, nb_mask)
+            return model.apply(params, g, nb_mask)
 
         return init_fn, forward
     if cfg.method == "fedgcn":
+        h = jnp.asarray(g.features)
         a_norm = jnp.asarray(normalized_adjacency(g.adj))
 
         def init_fn(k):
@@ -100,34 +121,34 @@ def _build_forward(cfg: FederatedConfig, g: Graph, key: Array):
     raise ValueError(f"unknown federated method {cfg.method!r}")
 
 
-def run_federated(g: Graph, cfg: FederatedConfig) -> Dict[str, Any]:
-    """Paper Algorithm 2: rounds of local training + aggregation."""
-    key = jax.random.PRNGKey(cfg.seed)
-    k_pack, k_init = jax.random.split(key)
-
-    part = dirichlet_partition(g.labels, cfg.num_clients, cfg.beta, cfg.seed)
+def client_masks(cfg: FederatedConfig, g: Graph, part: Partition):
+    """Per-client (edge-visibility, train-label) masks: (K, N, B), (K, N)."""
     K = cfg.num_clients
-
-    # Edge visibility per client.
     if cfg.method == "distgat":
-        nb_masks = jnp.asarray(client_neighbor_masks(g, part))          # (K, N, B)
+        nb_masks = jnp.asarray(client_neighbor_masks(g, part))
     else:
         nb_masks = jnp.broadcast_to(
             jnp.asarray(g.nbr_mask)[None], (K,) + g.nbr_mask.shape
         )
-    tr_masks = jnp.asarray(client_train_masks(g, part))                 # (K, N)
+    return nb_masks, jnp.asarray(client_train_masks(g, part))
 
-    init_fn, forward = _build_forward(cfg, g, k_pack)
-    global_params = init_fn(k_init)
-    labels = jnp.asarray(g.labels)
-    val_mask = jnp.asarray(g.val_mask)
-    test_mask = jnp.asarray(g.test_mask)
+
+def make_loss_fn(forward: Callable, labels: Array) -> Callable:
+    """Client objective shared by both backends: masked CE on the client's
+    training labels under its edge-visibility mask."""
 
     def loss_fn(params, nb_mask, tr_mask):
-        logits = forward(params, nb_mask)
-        return masked_cross_entropy(logits, labels, tr_mask)
+        return masked_cross_entropy(forward(params, nb_mask), labels, tr_mask)
 
-    def local_train(gparams, opt_state, nb_mask, tr_mask):
+    return loss_fn
+
+
+def make_local_update(loss_fn: Callable, cfg: FederatedConfig) -> Callable:
+    """One client's local phase: ``cfg.local_steps`` Adam steps from the
+    global params (with optional FedProx pull). Shared verbatim by the vmap
+    and shard_map backends so their trajectories match."""
+
+    def local_update(gparams, opt_state, nb_mask, tr_mask):
         def one(carry, _):
             params, opt = carry
             grads = jax.grad(loss_fn)(params, nb_mask, tr_mask)
@@ -143,81 +164,170 @@ def run_federated(g: Graph, cfg: FederatedConfig) -> Dict[str, Any]:
         )
         return params, opt_state
 
-    @jax.jit
-    def round_step(gparams, opt_states, server_state, sel):
-        """sel: (K,) float — client-selection weights CS(t) (Algorithm 2)."""
-        stacked_params, new_opt_states = jax.vmap(
-            local_train, in_axes=(None, 0, 0, 0)
-        )(gparams, opt_states, nb_masks, tr_masks)
-        # unselected clients keep their previous optimizer state
-        keep = sel > 0
-        opt_states = jax.tree.map(
-            lambda new, old: jnp.where(
-                keep.reshape((K,) + (1,) * (new.ndim - 1)), new, old
-            ),
-            new_opt_states, opt_states,
-        )
-        if cfg.aggregator == "fedadam":
-            new_global, server_state = fedadam_server(
-                gparams, stacked_params, server_state, cfg.server_lr, weights=sel
-            )
-        else:
-            new_global = fedavg(stacked_params, weights=sel)
-        return new_global, opt_states, server_state
+    return local_update
 
-    @jax.jit
-    def evaluate(params):
-        logits = forward(params, jnp.asarray(g.nbr_mask))
-        return (
-            masked_accuracy(logits, labels, val_mask),
-            masked_accuracy(logits, labels, test_mask),
-        )
 
-    opt_states = jax.vmap(lambda _: adam_init(global_params))(jnp.arange(K))
-    server_state = adam_init(global_params)
+def best_metrics(val_curve: Sequence[float], test_curve: Sequence[float]) -> Tuple[float, float]:
+    """Best-checkpoint rule shared by every runner: the FIRST round that
+    attains the maximum validation accuracy reports its test accuracy."""
+    if not len(val_curve):
+        return 0.0, 0.0
+    i = int(np.argmax(np.asarray(val_curve)))
+    return float(val_curve[i]), float(test_curve[i])
 
-    val_curve, test_curve = [], []
-    best_val, best_test = 0.0, 0.0
-    t0 = time.time()
-    sel_rng = np.random.default_rng(cfg.seed + 1)
-    n_sel = max(1, int(round(cfg.client_fraction * K)))
-    for _ in range(cfg.rounds):
-        if n_sel >= K:
-            sel = jnp.ones((K,), jnp.float32)
-        else:
-            chosen = sel_rng.choice(K, size=n_sel, replace=False)
-            sel = jnp.zeros((K,), jnp.float32).at[jnp.asarray(chosen)].set(1.0)
-        global_params, opt_states, server_state = round_step(
-            global_params, opt_states, server_state, sel
-        )
-        va, ta = evaluate(global_params)
-        va, ta = float(va), float(ta)
-        val_curve.append(va)
-        test_curve.append(ta)
-        if va >= best_val:
-            best_val, best_test = va, ta
 
-    report: Optional[comm_mod.CommReport] = None
-    if cfg.method == "fedgat":
-        fn = (
-            comm_mod.vector_comm_cost
-            if cfg.model.engine == "vector"
-            else comm_mod.matrix_comm_cost
-        )
-        report = fn(g, part, num_layers=2)
+def comm_report(cfg: FederatedConfig, g: Graph, part: Partition):
+    """Pre-training communication accounting (Theorem 1 / Appendix F)."""
+    if cfg.method != "fedgat":
+        return None
+    fn = comm_mod.comm_cost_for_engine(cfg.model.engine)
+    return fn(g, part, num_layers=2) if fn is not None else None
 
+
+def build_result(
+    *,
+    cfg: FederatedConfig,
+    params: Any,
+    val_curve: List[float],
+    test_curve: List[float],
+    part: Partition,
+    g: Graph,
+    seconds: float,
+    mesh=None,
+) -> Dict[str, Any]:
+    """The one result schema both backends return."""
+    best_val, best_test = best_metrics(val_curve, test_curve)
     return {
-        "params": global_params,
+        "params": params,
         "val_curve": val_curve,
         "test_curve": test_curve,
         "best_val": best_val,
         "best_test": best_test,
-        "final_test": test_curve[-1],
-        "comm": report,
+        "final_test": test_curve[-1] if test_curve else 0.0,
+        "comm": comm_report(cfg, g, part),
         "partition": part,
-        "seconds": time.time() - t0,
+        "seconds": seconds,
+        "backend": cfg.backend,
+        "mesh": mesh,
     }
 
+
+# ---------------------------------------------------------------------------
+# Trainer: one entry, two backends
+# ---------------------------------------------------------------------------
+
+class Trainer:
+    """Unified federated trainer; backend selected by ``cfg.backend``."""
+
+    def __init__(self, cfg: FederatedConfig):
+        if cfg.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {cfg.backend!r}: supported backends are {list(BACKENDS)}"
+            )
+        self.cfg = cfg
+
+    def run(self, g: Graph, mesh=None) -> Dict[str, Any]:
+        if self.cfg.backend == "shard_map":
+            from repro.federated.sharded import _run_shard_map  # lazy: avoid cycle
+
+            return _run_shard_map(g, self.cfg, mesh)
+        if mesh is not None:
+            raise ValueError(
+                f"mesh given but backend is {self.cfg.backend!r}; "
+                "use backend='shard_map' to run on a mesh"
+            )
+        return self._run_vmap(g)
+
+    def _run_vmap(self, g: Graph) -> Dict[str, Any]:
+        """Paper Algorithm 2: rounds of local training + aggregation."""
+        cfg = self.cfg
+        key = jax.random.PRNGKey(cfg.seed)
+        k_pack, k_init = jax.random.split(key)
+
+        part = dirichlet_partition(g.labels, cfg.num_clients, cfg.beta, cfg.seed)
+        K = cfg.num_clients
+
+        nb_masks, tr_masks = client_masks(cfg, g, part)
+        init_fn, forward = build_forward(cfg, g, k_pack)
+        global_params = init_fn(k_init)
+        labels = jnp.asarray(g.labels)
+        val_mask = jnp.asarray(g.val_mask)
+        test_mask = jnp.asarray(g.test_mask)
+
+        local_update = make_local_update(make_loss_fn(forward, labels), cfg)
+
+        @jax.jit
+        def round_step(gparams, opt_states, server_state, sel):
+            """sel: (K,) float — client-selection weights CS(t) (Algorithm 2)."""
+            stacked_params, new_opt_states = jax.vmap(
+                local_update, in_axes=(None, 0, 0, 0)
+            )(gparams, opt_states, nb_masks, tr_masks)
+            # unselected clients keep their previous optimizer state
+            keep = sel > 0
+            opt_states = jax.tree.map(
+                lambda new, old: jnp.where(
+                    keep.reshape((K,) + (1,) * (new.ndim - 1)), new, old
+                ),
+                new_opt_states, opt_states,
+            )
+            if cfg.aggregator == "fedadam":
+                new_global, server_state = fedadam_server(
+                    gparams, stacked_params, server_state, cfg.server_lr, weights=sel
+                )
+            else:
+                new_global = fedavg(stacked_params, weights=sel)
+            return new_global, opt_states, server_state
+
+        @jax.jit
+        def evaluate(params):
+            logits = forward(params, jnp.asarray(g.nbr_mask))
+            return (
+                masked_accuracy(logits, labels, val_mask),
+                masked_accuracy(logits, labels, test_mask),
+            )
+
+        opt_states = jax.vmap(lambda _: adam_init(global_params))(jnp.arange(K))
+        server_state = adam_init(global_params)
+
+        val_curve, test_curve = [], []
+        t0 = time.time()
+        sel_rng = np.random.default_rng(cfg.seed + 1)
+        n_sel = max(1, int(round(cfg.client_fraction * K)))
+        for _ in range(cfg.rounds):
+            if n_sel >= K:
+                sel = jnp.ones((K,), jnp.float32)
+            else:
+                chosen = sel_rng.choice(K, size=n_sel, replace=False)
+                sel = jnp.zeros((K,), jnp.float32).at[jnp.asarray(chosen)].set(1.0)
+            global_params, opt_states, server_state = round_step(
+                global_params, opt_states, server_state, sel
+            )
+            va, ta = evaluate(global_params)
+            val_curve.append(float(va))
+            test_curve.append(float(ta))
+
+        return build_result(
+            cfg=cfg, params=global_params, val_curve=val_curve,
+            test_curve=test_curve, part=part, g=g, seconds=time.time() - t0,
+        )
+
+
+def run_federated(
+    g: Graph,
+    cfg: FederatedConfig,
+    *,
+    backend: Optional[str] = None,
+    mesh=None,
+) -> Dict[str, Any]:
+    """Run federated training; ``backend`` overrides ``cfg.backend``."""
+    if backend is not None:
+        cfg = replace(cfg, backend=backend)
+    return Trainer(cfg).run(g, mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# Centralised baselines
+# ---------------------------------------------------------------------------
 
 def train_centralized(
     g: Graph,
@@ -230,7 +340,8 @@ def train_centralized(
     gcn_hidden: int = 16,
 ) -> Dict[str, Any]:
     """Centralised GAT / GCN / FedGAT-approximation baselines (Table 1)."""
-    h, nbr_idx, nbr_mask, labels = _as_jnp(g)
+    h = jnp.asarray(g.features)
+    labels = jnp.asarray(g.labels)
     key = jax.random.PRNGKey(seed)
     k_pack, k_init = jax.random.split(key)
 
@@ -242,14 +353,12 @@ def train_centralized(
             return gcn_forward(p, h, a_norm)
     else:
         mcfg = mcfg or FedGATConfig(engine="exact" if model == "gat" else "direct")
-        coeffs = (
-            jnp.asarray(mcfg.coeffs(), jnp.float32) if mcfg.engine != "exact" else None
-        )
-        pack = make_pack(k_pack, mcfg, h, nbr_idx, nbr_mask)
-        params = init_params(k_init, g.feature_dim, g.num_classes, mcfg)
+        net = FedGAT(mcfg)
+        net.precommunicate(k_pack, g)
+        params = net.init(k_init, g)
 
         def forward(p):
-            return fedgat_forward(p, mcfg, coeffs, pack, h, nbr_idx, nbr_mask)
+            return net.apply(p, g)
 
     train_mask = jnp.asarray(g.train_mask)
     val_mask = jnp.asarray(g.val_mask)
@@ -272,16 +381,13 @@ def train_centralized(
         )
 
     opt = adam_init(params)
-    best_val, best_test = 0.0, 0.0
     val_curve, test_curve = [], []
     for _ in range(steps):
         params, opt = step_fn(params, opt)
         va, ta = evaluate(params)
-        va, ta = float(va), float(ta)
-        val_curve.append(va)
-        test_curve.append(ta)
-        if va >= best_val:
-            best_val, best_test = va, ta
+        val_curve.append(float(va))
+        test_curve.append(float(ta))
+    best_val, best_test = best_metrics(val_curve, test_curve)
     return {
         "params": params,
         "best_val": best_val,

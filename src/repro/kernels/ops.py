@@ -1,7 +1,8 @@
 """jit'd wrappers exposing the Pallas kernels to the rest of the stack."""
 from __future__ import annotations
 
-from typing import Dict, Tuple
+import os
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -13,8 +14,20 @@ from repro.kernels import ref
 
 Array = jax.Array
 
-# CPU containers run the kernels in interpret mode; flip on TPU.
-INTERPRET = jax.default_backend() != "tpu"
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Per-call interpret-mode decision.
+
+    Priority: explicit argument > REPRO_PALLAS_INTERPRET env var ("1"/"0",
+    "true"/"false", ...) > backend default (interpret everywhere but TPU).
+    Resolved at call time so the backend may change after import.
+    """
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip()
+    if env:  # empty counts as unset
+        return env.lower() not in ("0", "false", "no", "off")
+    return jax.default_backend() != "tpu"
 
 
 def cheb_attn_layer(
@@ -27,6 +40,7 @@ def cheb_attn_layer(
     basis: str = "power",
     domain: Tuple[float, float] = (-4.0, 4.0),
     concat: bool = True,
+    interpret: Optional[bool] = None,
 ) -> Array:
     """FedGAT layer-1 via the fused Pallas kernel ("kernel" engine).
 
@@ -37,6 +51,7 @@ def cheb_attn_layer(
         raise ValueError("kernel engine evaluates the monomial (power) basis")
     from repro.core.poly_attention import edge_scores, head_projections
 
+    interp = resolve_interpret(interpret)
     n, d = h.shape
     b1, b2 = head_projections(params)
     x = edge_scores(b1, b2, h, nbr_idx)                  # (H, N, B)
@@ -57,7 +72,7 @@ def cheb_attn_layer(
     for hd_i in range(x.shape[0]):                        # per attention head
         agg = cheb_attn(
             xp[hd_i], hp, mp, jnp.asarray(coeffs, jnp.float32),
-            block_n=bn, block_d=bd, interpret=INTERPRET,
+            block_n=bn, block_d=bd, interpret=interp,
         )[:n, :d]
         outs.append(agg @ params["W"][hd_i])
     out = jnp.stack(outs, axis=0)                          # (H, N, d_out)
@@ -66,4 +81,4 @@ def cheb_attn_layer(
     return out.mean(axis=0)
 
 
-__all__ = ["cheb_attn", "flash_attn", "poly_attn", "cheb_attn_layer", "ref", "INTERPRET"]
+__all__ = ["cheb_attn", "flash_attn", "poly_attn", "cheb_attn_layer", "ref", "resolve_interpret"]

@@ -24,9 +24,17 @@ def _axis_size(mesh: Mesh, name) -> int:
     return int(mesh.shape[name])
 
 
+def _canon(axis) -> Any:
+    """Unwrap 1-tuples: P(("data",)) and P("data") are the same sharding but
+    compare unequal on older jax PartitionSpec."""
+    if isinstance(axis, tuple) and len(axis) == 1:
+        return axis[0]
+    return axis
+
+
 def _fit(mesh: Mesh, dim: int, axis) -> Any:
     """axis if dim divides the mesh axis size, else None (replicate)."""
-    return axis if dim % _axis_size(mesh, axis) == 0 else None
+    return _canon(axis) if dim % _axis_size(mesh, axis) == 0 else None
 
 
 def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -138,13 +146,13 @@ def opt_shardings_zero1(mesh: Mesh, params_shape: Any) -> Any:
             if ax == "model":
                 joint = ("model",) + dp
                 if dim % _axis_size(mesh, joint) == 0:
-                    spec[i] = joint
+                    spec[i] = _canon(joint)
                 return NamedSharding(mesh, P(*spec))
         # replicated param: shard its largest divisible dim over data
         order = sorted(range(x.ndim), key=lambda i: -x.shape[i])
         for i in order:
             if spec[i] is None and x.shape[i] % _axis_size(mesh, dp) == 0 and x.shape[i] > 1:
-                spec[i] = dp
+                spec[i] = _canon(dp)
                 break
         return NamedSharding(mesh, P(*spec))
 

@@ -189,10 +189,9 @@ def moe_ffn_sharded(p: Dict, cfg: ArchConfig, x: Array, mesh) -> Tuple[Array, Di
         jax.tree.map(lambda _: P("model"), p["experts"]),  # expert-sharded
     )
     out_specs = (P(bspec, None, None), P())
-    fn = jax.shard_map(
-        local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False,
-    )
+    from repro._compat.jax_compat import shard_map
+
+    fn = shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
     out, aux_loss = fn(x, p["router"]["w"], p["experts"])
     return out, {"moe_aux_loss": aux_loss,
                  "moe_drop_frac": jnp.zeros((), jnp.float32)}

@@ -1,0 +1,163 @@
+"""Engine registry + FedGAT facade: lookup errors, round-trips, and
+equivalence of the backwards-compatible free functions with the facade."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Engine,
+    FedGAT,
+    FedGATConfig,
+    fedgat_forward,
+    get_engine,
+    init_params,
+    make_pack,
+    register_engine,
+    registered_engines,
+)
+from repro.graphs import make_cora_like
+
+SEED_ENGINES = ("direct", "exact", "kernel", "matrix", "vector")
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return make_cora_like("tiny", seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Registry mechanics
+# ---------------------------------------------------------------------------
+
+def test_all_seed_engines_registered():
+    assert set(SEED_ENGINES) <= set(registered_engines())
+
+
+def test_unknown_engine_raises_helpful_keyerror():
+    with pytest.raises(KeyError) as ei:
+        get_engine("definitely-not-an-engine")
+    msg = str(ei.value)
+    for name in SEED_ENGINES:
+        assert name in msg  # the error lists what IS registered
+    with pytest.raises(ValueError):  # pre-registry contract still holds
+        get_engine("definitely-not-an-engine")
+
+
+def test_engines_declare_comm_cost_model():
+    from repro.federated.comm import comm_cost_for_engine, matrix_comm_cost, vector_comm_cost
+
+    assert comm_cost_for_engine("matrix") is matrix_comm_cost
+    assert comm_cost_for_engine("direct") is matrix_comm_cost  # simulates matrix
+    assert comm_cost_for_engine("vector") is vector_comm_cost
+    assert comm_cost_for_engine("exact") is None  # no pack communicated
+
+
+def test_pack_is_bound_to_its_graph(graph):
+    other = make_cora_like("tiny", seed=1)
+    model = FedGAT(FedGATConfig(engine="matrix", degree=8))
+    params = model.init(jax.random.PRNGKey(0), graph)
+    model.precommunicate(jax.random.PRNGKey(1), graph)
+    model.apply(params, graph)  # fine
+    with pytest.raises(RuntimeError, match="different graph"):
+        model.apply(params, other)
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError):
+        @register_engine("matrix")
+        class Dup(Engine):
+            pass
+
+
+def test_register_new_engine_is_usable_end_to_end(graph):
+    """A one-class addition becomes a first-class engine name."""
+    direct_cls = get_engine("direct")
+
+    @register_engine("direct-alias-for-test")
+    class Alias(direct_cls):
+        pass
+
+    try:
+        model = FedGAT(FedGATConfig(engine="direct-alias-for-test", degree=8))
+        params = model.init(jax.random.PRNGKey(0), graph)
+        model.precommunicate(jax.random.PRNGKey(1), graph)
+        out = np.asarray(model.apply(params, graph))
+        ref = FedGAT(FedGATConfig(engine="direct", degree=8))
+        ref.precommunicate(jax.random.PRNGKey(1), graph)
+        np.testing.assert_array_equal(out, np.asarray(ref.apply(params, graph)))
+    finally:
+        from repro.core.engine import unregister_engine
+
+        unregister_engine("direct-alias-for-test")
+        assert "direct-alias-for-test" not in registered_engines()
+
+
+# ---------------------------------------------------------------------------
+# Facade round-trips
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", SEED_ENGINES)
+def test_engine_roundtrips_through_facade(graph, engine):
+    model = FedGAT(FedGATConfig(engine=engine, degree=10))
+    params = model.init(jax.random.PRNGKey(1), graph)
+    model.precommunicate(jax.random.PRNGKey(2), graph)
+    out = np.asarray(model.apply(params, graph))
+    assert out.shape == (graph.num_nodes, graph.num_classes)
+    assert np.isfinite(out).all()
+
+
+def test_approximate_engines_agree_with_direct(graph):
+    outs = {}
+    params = None
+    for engine in ("direct", "matrix", "vector", "kernel"):
+        model = FedGAT(FedGATConfig(engine=engine, degree=12))
+        if params is None:
+            params = model.init(jax.random.PRNGKey(1), graph)
+        model.precommunicate(jax.random.PRNGKey(2), graph)
+        outs[engine] = np.asarray(model.apply(params, graph))
+    np.testing.assert_allclose(outs["matrix"], outs["direct"], rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(outs["vector"], outs["direct"], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(outs["kernel"], outs["direct"], rtol=1e-4, atol=1e-4)
+
+
+def test_pack_engine_requires_precommunicate(graph):
+    model = FedGAT(FedGATConfig(engine="matrix", degree=8))
+    params = model.init(jax.random.PRNGKey(0), graph)
+    with pytest.raises(RuntimeError, match="precommunicate"):
+        model.apply(params, graph)
+
+
+def test_coeffs_computed_once_at_construction(graph):
+    model = FedGAT(FedGATConfig(engine="direct", degree=8))
+    assert model.coeffs is not None and model.coeffs.shape == (9,)
+    exact = FedGAT(FedGATConfig(engine="exact"))
+    assert exact.coeffs is None  # degenerate engine needs no series
+
+
+# ---------------------------------------------------------------------------
+# Old free functions == new facade
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", SEED_ENGINES)
+def test_wrappers_match_facade_exactly(graph, engine):
+    cfg = FedGATConfig(engine=engine, degree=10)
+    h = jnp.asarray(graph.features)
+    nbr_idx = jnp.asarray(graph.nbr_idx)
+    nbr_mask = jnp.asarray(graph.nbr_mask)
+    k_init, k_pack = jax.random.PRNGKey(3), jax.random.PRNGKey(4)
+
+    model = FedGAT(cfg)
+    params = model.init(k_init, graph)
+    model.precommunicate(k_pack, graph)
+    new = np.asarray(model.apply(params, graph))
+
+    assert jax.tree.all(
+        jax.tree.map(
+            np.array_equal, params, init_params(k_init, graph.feature_dim, graph.num_classes, cfg)
+        )
+    )
+    coeffs = jnp.asarray(cfg.coeffs(), jnp.float32) if engine != "exact" else None
+    pack = make_pack(k_pack, cfg, h, nbr_idx, nbr_mask)
+    old = np.asarray(fedgat_forward(params, cfg, coeffs, pack, h, nbr_idx, nbr_mask))
+    np.testing.assert_array_equal(old, new)

@@ -1,4 +1,5 @@
-"""shard_map federated runner: must reproduce the vmap trainer's trajectory.
+"""shard_map backend: must reproduce the vmap backend's trajectory AND
+report the same metrics through the unified result schema.
 
 Runs in a subprocess because the client-per-device layout needs
 XLA_FLAGS=--xla_force_host_platform_device_count, which must be set before
@@ -19,17 +20,30 @@ assert len(jax.devices()) == 4, jax.devices()
 g = make_cora_like('tiny', 0)
 cfg = FederatedConfig(method='fedgat', num_clients=4, rounds=6, local_steps=2,
                       model=FedGATConfig(engine='direct', degree=10))
-r1 = run_federated(g, cfg)
-r2 = run_federated_sharded(g, cfg)
+r1 = run_federated(g, cfg, backend='vmap')
+r2 = run_federated(g, cfg, backend='shard_map')
 np.testing.assert_allclose(r1['test_curve'], r2['test_curve'], atol=1e-6)
+np.testing.assert_allclose(r1['val_curve'], r2['val_curve'], atol=1e-6)
 diff = max(float(abs(a - b).max())
            for a, b in zip(jax.tree.leaves(r1['params']), jax.tree.leaves(r2['params'])))
 assert diff < 5e-3, diff
 
-# DistGAT path also lowers through shard_map.
+# Unified result schema: identical keys, identical reported metrics.
+assert set(r1) == set(r2), set(r1) ^ set(r2)
+assert r1['backend'] == 'vmap' and r2['backend'] == 'shard_map'
+for k in ('best_val', 'best_test', 'final_test'):
+    assert abs(r1[k] - r2[k]) < 1e-6, (k, r1[k], r2[k])
+assert r1['comm'].download_scalars == r2['comm'].download_scalars
+
+# DistGAT path also lowers through shard_map (via the legacy wrapper).
 cfg2 = FederatedConfig(method='distgat', num_clients=4, rounds=3, local_steps=1)
 r3 = run_federated_sharded(g, cfg2)
-assert len(r3['test_curve']) == 3
+assert len(r3['test_curve']) == 3 and r3['backend'] == 'shard_map'
+
+# FedGCN rides the same unified backend.
+cfg3 = FederatedConfig(method='fedgcn', num_clients=4, rounds=3, local_steps=1)
+r4 = run_federated(g, cfg3, backend='shard_map')
+assert len(r4['test_curve']) == 3
 print('SHARDED_OK')
 """
 

@@ -143,7 +143,10 @@ def test_analyzer_matches_xla_on_straightline():
     y = jax.ShapeDtypeStruct((256, 64), jnp.float32)
     compiled = jax.jit(f).lower(x, y).compile()
     ours = analyze_hlo(compiled.as_text()).flops
-    xla = compiled.cost_analysis()["flops"]
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jax returns a per-device list
+        ca = ca[0]
+    xla = ca["flops"]
     assert abs(ours - xla) / xla < 0.01
 
 
