@@ -1,12 +1,81 @@
-"""Shared benchmark utilities: timing, result persistence, CSV emission."""
+"""Shared benchmark utilities: timing, result persistence, CSV emission,
+and the backend-aware CLI used by the figure scripts."""
 from __future__ import annotations
 
+import argparse
 import json
+import os
 import pathlib
+import sys
 import time
 from typing import Any, Callable, Dict, List
 
 RESULTS_DIR = pathlib.Path(__file__).parent / "results"
+
+BACKEND_CHOICES = ("vmap", "shard_map")
+
+
+def request_host_devices(n: int) -> None:
+    """Make >= n devices available for the shard_map backend (one client per
+    device). On CPU hosts this forces
+    ``--xla_force_host_platform_device_count``; the flag is read lazily at
+    backend initialisation, so this works until the first jax device use
+    (not merely the first ``import jax``). A pre-existing smaller count in
+    XLA_FLAGS is raised to ``n``, never lowered."""
+    import re
+
+    flag_re = re.compile(r"--xla_force_host_platform_device_count=(\d+)")
+    existing = os.environ.get("XLA_FLAGS", "")
+    m = flag_re.search(existing)
+    count = max(n, int(m.group(1))) if m else n
+    rest = flag_re.sub("", existing).strip()
+    os.environ["XLA_FLAGS"] = (
+        f"{rest} --xla_force_host_platform_device_count={count}".strip()
+    )
+    if "jax" in sys.modules:
+        import jax
+
+        # Initialises the backend if it wasn't yet — with the flag above in
+        # place, so this only fails when it was already too late.
+        if len(jax.devices()) < n:
+            raise RuntimeError(
+                f"shard_map backend needs >= {n} devices but jax already "
+                f"initialised with {len(jax.devices())}; set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+                "before the first jax device use"
+            )
+
+
+def figure_cli(
+    run: Callable[..., List[Dict[str, Any]]],
+    derived: Callable[[List[Dict[str, Any]]], str],
+    name: str,
+    max_clients: Callable[[bool], int],
+    argv: List[str] | None = None,
+) -> None:
+    """Shared ``--backend``-aware entry point for the figure scripts.
+
+    Parses the common flags, forces enough host devices for shard_map
+    BEFORE jax initialises (the figure scripts defer their repro imports
+    into ``run()`` for exactly this reason), then runs, saves and prints.
+    """
+    ap = argparse.ArgumentParser(description=f"benchmark {name}")
+    ap.add_argument("--backend", choices=BACKEND_CHOICES, default="vmap",
+                    help="federated Trainer backend (default: vmap)")
+    ap.add_argument("--fast", action="store_true", help="reduced sweeps")
+    ap.add_argument("--dataset", default="cora_like")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.backend == "shard_map":
+        request_host_devices(max_clients(args.fast))
+    t0 = time.perf_counter()
+    rows = run(fast=args.fast, dataset=args.dataset, seed=args.seed,
+               backend=args.backend)
+    us = (time.perf_counter() - t0) * 1e6
+    out_name = f"{name}_{args.backend}" if args.backend != "vmap" else name
+    save_results(out_name, rows)
+    print("name,us_per_call,derived")
+    print(csv_row(out_name, us, derived(rows)), flush=True)
 
 
 def save_results(name: str, rows: List[Dict[str, Any]]) -> None:

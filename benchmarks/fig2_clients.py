@@ -1,19 +1,49 @@
 """Figure 2: test accuracy vs number of clients (iid / non-iid) for
-FedGAT / DistGAT / FedGCN."""
+FedGAT / DistGAT / FedGCN.
+
+Driven through the unified ``Trainer`` facade; ``--backend shard_map``
+runs the identical sweep with one client per device (host devices are
+forced automatically when run as a script).
+
+  PYTHONPATH=src python benchmarks/fig2_clients.py [--fast] [--backend shard_map]
+"""
 from __future__ import annotations
 
+import pathlib
+import sys
 from typing import Dict, List
 
-from repro.core import FedGATConfig
-from repro.federated import FederatedConfig, run_federated
-from repro.graphs import make_cora_like
+if __package__ in (None, ""):  # run as a script: wire repo root + src
+    _root = pathlib.Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(_root / "src"))
+    sys.path.insert(0, str(_root))
+
+from benchmarks.common import figure_cli
 
 CLIENTS = (1, 5, 10, 20)
 BETAS = {"non-iid": 1.0, "iid": 10_000.0}
 
 
-def run(fast: bool = False, dataset: str = "cora_like", seed: int = 0) -> List[Dict]:
-    clients = (1, 10) if fast else CLIENTS
+def clients_for(fast: bool):
+    return (1, 10) if fast else CLIENTS
+
+
+def max_clients(fast: bool) -> int:
+    return max(clients_for(fast))
+
+
+def run(
+    fast: bool = False,
+    dataset: str = "cora_like",
+    seed: int = 0,
+    backend: str = "vmap",
+) -> List[Dict]:
+    # repro imports are deferred so the CLI can force host devices first.
+    from repro.core import FedGATConfig
+    from repro.federated import FederatedConfig, Trainer
+    from repro.graphs import make_cora_like
+
+    clients = clients_for(fast)
     rounds = 25 if fast else 60
     g = make_cora_like(dataset, seed=seed)
     rows = []
@@ -21,14 +51,15 @@ def run(fast: bool = False, dataset: str = "cora_like", seed: int = 0) -> List[D
         for setting, beta in BETAS.items():
             for k in clients:
                 cfg = FederatedConfig(
-                    method=method, num_clients=k, beta=beta, rounds=rounds,
-                    local_steps=3, seed=seed,
+                    method=method, backend=backend, num_clients=k, beta=beta,
+                    rounds=rounds, local_steps=3, seed=seed,
                     lr=0.03 if method == "fedgcn" else 0.02,
                     model=FedGATConfig(engine="direct", degree=16),
                 )
-                res = run_federated(g, cfg)
-                rows.append({"dataset": dataset, "method": method, "setting": setting,
-                             "clients": k, "acc": res["best_test"]})
+                res = Trainer(cfg).run(g)
+                rows.append({"dataset": dataset, "method": method,
+                             "setting": setting, "clients": k,
+                             "backend": backend, "acc": res["best_test"]})
     return rows
 
 
@@ -41,3 +72,7 @@ def derived(rows: List[Dict]) -> str:
     return (f"fedgat@{kmax}cl={at('fedgat', kmax):.3f} "
             f"distgat@{kmax}cl={at('distgat', kmax):.3f} "
             f"drop_robustness={at('fedgat', kmax) - at('distgat', kmax):.3f}")
+
+
+if __name__ == "__main__":
+    figure_cli(run, derived, "fig2_clients", max_clients)

@@ -34,6 +34,39 @@ def fedprox_grad(local_params: PyTree, global_params: PyTree, grads: PyTree, mu:
     return jax.tree.map(lambda g, p, gp: g + mu * (p - gp), grads, local_params, global_params)
 
 
+def fedadam_update(
+    global_params: PyTree,
+    mean_params: PyTree,
+    opt_state: AdamState,
+    server_lr: float = 0.05,
+    b1: float = 0.9,
+    b2: float = 0.99,
+    eps: float = 1e-6,
+) -> Tuple[PyTree, AdamState]:
+    """Server-side Adam step on the pseudo-gradient
+    Delta = W_global - mean_k(W_k), given the already-aggregated client mean.
+
+    This is the core both backends share: the vmap backend aggregates the
+    stacked client axis first (``fedadam_server``), the shard_map backend
+    aggregates with a weighted ``psum`` over the mesh axis and feeds the
+    replicated mean here — the math past the mean is identical by
+    construction.
+    """
+    delta = jax.tree.map(lambda gp, m: gp - m, global_params, mean_params)
+    step = opt_state.step + 1
+    t = step.astype(jnp.float32)
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, opt_state.mu, delta)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, opt_state.nu, delta)
+
+    def upd(p, m, v):
+        mhat = m / (1 - b1 ** t)
+        vhat = v / (1 - b2 ** t)
+        return p - server_lr * mhat / (jnp.sqrt(vhat) + eps)
+
+    new_params = jax.tree.map(upd, global_params, mu, nu)
+    return new_params, AdamState(step=step, mu=mu, nu=nu)
+
+
 def fedadam_server(
     global_params: PyTree,
     stacked_params: PyTree,
@@ -47,16 +80,6 @@ def fedadam_server(
     """FedAdam (Reddi et al. 2020): Adam on the pseudo-gradient
     Delta = W_global - mean_k(W_k)."""
     mean = fedavg(stacked_params, weights=weights)
-    delta = jax.tree.map(lambda gp, m: gp - m, global_params, mean)
-    step = opt_state.step + 1
-    t = step.astype(jnp.float32)
-    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, opt_state.mu, delta)
-    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, opt_state.nu, delta)
-
-    def upd(p, m, v):
-        mhat = m / (1 - b1 ** t)
-        vhat = v / (1 - b2 ** t)
-        return p - server_lr * mhat / (jnp.sqrt(vhat) + eps)
-
-    new_params = jax.tree.map(upd, global_params, mu, nu)
-    return new_params, AdamState(step=step, mu=mu, nu=nu)
+    return fedadam_update(
+        global_params, mean, opt_state, server_lr, b1=b1, b2=b2, eps=eps
+    )

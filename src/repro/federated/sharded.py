@@ -5,18 +5,34 @@ This is the TPU-native realisation of the paper's communication pattern
 collectives crossing the client axis are
 
   * one ``all_gather`` equivalent at setup (the pre-training pack is
-    computed once and replicated — the single communication round), and
-  * a ``lax.pmean`` over the client axis per aggregation round (FedAvg).
+    computed once and replicated — the single communication round),
+  * a weighted ``lax.psum`` over the client axis per aggregation round
+    (FedAvg / FedProx / the client mean feeding server-side FedAdam), and
+  * a scalar ``psum`` broadcasting the round's evaluation metrics, which
+    are computed on shard 0 only.
 
 No feature tensors cross clients during training — exactly the paper's
 guarantee — and the whole R-round schedule compiles into a single XLA
 program with a ``lax.scan`` over rounds.
 
+Feature parity with the vmap backend (trainer.py):
+
+  * every aggregator (fedavg / fedprox / fedadam) — the server Adam state
+    is replicated into every shard and threaded through the scan carry;
+    since the weighted ``psum`` mean is identical on all shards, the
+    replicated states never diverge;
+  * client subsampling (Algorithm 2's CS(t)) — the 0/1 participation
+    weights are precomputed host-side by the SAME
+    :func:`~repro.federated.trainer.selection_schedule` the vmap backend
+    uses and scanned as a ``(rounds, K)`` array sharded over the client
+    axis; an unselected shard contributes zero weight to the ``psum`` and
+    keeps its optimizer state.
+
 This backend is reached through the unified entry
 (``run_federated(g, cfg, backend="shard_map")`` / ``Trainer``); it shares
 the model construction, local-update math and result schema with the vmap
-backend (trainer.py), and tests assert the two produce identical metric
-trajectories.
+backend, and tests assert the two produce identical metric trajectories
+for every (aggregator, client_fraction) combination.
 """
 from __future__ import annotations
 
@@ -30,6 +46,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro._compat.jax_compat import shard_map
 from repro.core.gat import masked_accuracy
+from repro.federated.aggregation import fedadam_update
 from repro.federated.partition import dirichlet_partition
 from repro.federated.trainer import (
     FederatedConfig,
@@ -39,6 +56,7 @@ from repro.federated.trainer import (
     make_local_update,
     make_loss_fn,
     run_federated,
+    selection_schedule,
 )
 from repro.graphs.graph import Graph
 from repro.optim.adamw import adam_init
@@ -57,12 +75,6 @@ def _client_mesh(num_clients: int) -> Mesh:
 def _run_shard_map(g: Graph, cfg: FederatedConfig, mesh: Mesh | None = None) -> Dict[str, Any]:
     """FedGAT/DistGAT/FedGCN rounds with clients sharded over a mesh axis."""
     K = cfg.num_clients
-    if cfg.aggregator == "fedadam":
-        raise ValueError("shard_map backend supports fedavg/fedprox aggregation")
-    if cfg.client_fraction < 1.0:
-        raise ValueError("shard_map backend runs all clients every round")
-    if mesh is None:
-        mesh = _client_mesh(K)
 
     t0 = time.time()
     key = jax.random.PRNGKey(cfg.seed)
@@ -73,6 +85,20 @@ def _run_shard_map(g: Graph, cfg: FederatedConfig, mesh: Mesh | None = None) -> 
     init_fn, forward = build_forward(cfg, g, k_pack)
     global_params = init_fn(k_init)
 
+    if cfg.rounds == 0:
+        # Pure setup/accounting (fig3's path): the partition, pack and comm
+        # report need no devices, so don't require a K-device mesh.
+        return build_result(
+            cfg=cfg, params=global_params, val_curve=[], test_curve=[],
+            part=part, g=g, seconds=time.time() - t0, mesh=mesh,
+        )
+
+    if mesh is None:
+        mesh = _client_mesh(K)
+    server_state = adam_init(global_params)
+    sel, _ = selection_schedule(cfg)          # (rounds, K) — CS(t) weights
+    sel = jnp.asarray(sel)
+
     labels = jnp.asarray(g.labels)
     nbr_mask = jnp.asarray(g.nbr_mask)
     val_mask = jnp.asarray(g.val_mask)
@@ -80,26 +106,53 @@ def _run_shard_map(g: Graph, cfg: FederatedConfig, mesh: Mesh | None = None) -> 
 
     local_update = make_local_update(make_loss_fn(forward, labels), cfg)
 
-    def shard_body(nb_masks_s, tr_masks_s, gparams):
-        """Runs on one shard = one client. Leading axis of masks is size 1."""
+    def shard_body(nb_masks_s, tr_masks_s, sel_s, gparams, srv_state):
+        """Runs on one shard = one client. Leading client axis is size 1."""
         nb_mask = nb_masks_s[0]
         tr_mask = tr_masks_s[0]
+        my_sel = sel_s[:, 0]                  # (rounds,) this client's CS(t)
         opt_state = adam_init(gparams)
 
-        def round_fn(carry, _):
-            gp, opt = carry
-            local_params, opt = local_update(gp, opt, nb_mask, tr_mask)
-            # FedAvg: the ONLY training-time cross-client collective.
-            new_global = jax.tree.map(
-                lambda p: jax.lax.pmean(p, "clients"), local_params
+        def round_fn(carry, w):
+            gp, opt, srv = carry
+            local_params, new_opt = local_update(gp, opt, nb_mask, tr_mask)
+            # An unselected shard keeps its optimizer state (same rule as
+            # the vmap backend's scatter of selected states only).
+            opt = jax.tree.map(
+                lambda new, old: jnp.where(w > 0, new, old), new_opt, opt
             )
-            logits = forward(new_global, nbr_mask)
-            va = masked_accuracy(logits, labels, val_mask)
-            ta = masked_accuracy(logits, labels, test_mask)
-            return (new_global, opt), (va, ta)
+            # The ONLY training-time cross-client collective: weighted mean
+            # of the participating clients' params.
+            den = jax.lax.psum(w, "clients")
+            mean = jax.tree.map(
+                lambda p: jax.lax.psum(w * p, "clients") / den, local_params
+            )
+            if cfg.aggregator == "fedadam":
+                new_global, srv = fedadam_update(gp, mean, srv, cfg.server_lr)
+            else:
+                new_global = mean
+            # Evaluation: new_global is replicated, so the full-graph
+            # forward is identical on every shard — run it on shard 0 only
+            # and broadcast the two scalars with a psum.
+            def do_eval(_):
+                logits = forward(new_global, nbr_mask)
+                return (
+                    masked_accuracy(logits, labels, val_mask),
+                    masked_accuracy(logits, labels, test_mask),
+                )
 
-        (gp, _), (vas, tas) = jax.lax.scan(
-            round_fn, (gparams, opt_state), None, length=cfg.rounds
+            def skip_eval(_):
+                return jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)
+
+            va, ta = jax.lax.cond(
+                jax.lax.axis_index("clients") == 0, do_eval, skip_eval, None
+            )
+            va = jax.lax.psum(va, "clients")
+            ta = jax.lax.psum(ta, "clients")
+            return (new_global, opt, srv), (va, ta)
+
+        (gp, _, _), (vas, tas) = jax.lax.scan(
+            round_fn, (gparams, opt_state, srv_state), my_sel
         )
         return gp, vas, tas
 
@@ -108,11 +161,11 @@ def _run_shard_map(g: Graph, cfg: FederatedConfig, mesh: Mesh | None = None) -> 
         shard_map(
             shard_body,
             mesh=mesh,
-            in_specs=(spec_clients, spec_clients, P()),
+            in_specs=(spec_clients, spec_clients, P(None, "clients"), P(), P()),
             out_specs=(P(), P(), P()),
         )
     )
-    gp, vas, tas = fn(nb_masks, tr_masks, global_params)
+    gp, vas, tas = fn(nb_masks, tr_masks, sel, global_params, server_state)
     val_curve = [float(x) for x in np.asarray(vas)]
     test_curve = [float(x) for x in np.asarray(tas)]
     return build_result(

@@ -167,6 +167,34 @@ def make_local_update(loss_fn: Callable, cfg: FederatedConfig) -> Callable:
     return local_update
 
 
+def selection_schedule(cfg: FederatedConfig) -> Tuple[np.ndarray, np.ndarray]:
+    """Algorithm 2's CS(t), precomputed host-side for the whole run.
+
+    Returns ``(sel, chosen)``:
+      sel    — (rounds, K) float32 0/1 participation weights, the layout the
+               shard_map backend scans over (each shard reads its column);
+      chosen — (rounds, n_sel) int32 indices of the participating clients,
+               the layout the vmap backend gathers with.
+
+    Both backends consume the SAME schedule (same RNG stream), so partial
+    participation cannot make their trajectories diverge.
+    """
+    K = cfg.num_clients
+    n_sel = max(1, int(round(cfg.client_fraction * K)))
+    if n_sel >= K:
+        sel = np.ones((cfg.rounds, K), np.float32)
+        chosen = np.broadcast_to(np.arange(K, dtype=np.int32), (cfg.rounds, K))
+        return sel, np.ascontiguousarray(chosen)
+    rng = np.random.default_rng(cfg.seed + 1)
+    sel = np.zeros((cfg.rounds, K), np.float32)
+    chosen = np.zeros((cfg.rounds, n_sel), np.int32)
+    for t in range(cfg.rounds):
+        c = rng.choice(K, size=n_sel, replace=False)
+        sel[t, c] = 1.0
+        chosen[t] = c
+    return sel, chosen
+
+
 def best_metrics(val_curve: Sequence[float], test_curve: Sequence[float]) -> Tuple[float, float]:
     """Best-checkpoint rule shared by every runner: the FIRST round that
     attains the maximum validation accuracy reports its test accuracy."""
@@ -181,7 +209,20 @@ def comm_report(cfg: FederatedConfig, g: Graph, part: Partition):
     if cfg.method != "fedgat":
         return None
     fn = comm_mod.comm_cost_for_engine(cfg.model.engine)
-    return fn(g, part, num_layers=2) if fn is not None else None
+    return fn(g, part, num_layers=cfg.model.num_layers) if fn is not None else None
+
+
+def mesh_description(mesh) -> Optional[Dict[str, Any]]:
+    """Serializable stand-in for a live ``Mesh`` in result dicts (results
+    must pickle/JSON cleanly for the benchmark dumps)."""
+    if mesh is None:
+        return None
+    return {
+        "axis_names": [str(n) for n in mesh.axis_names],
+        "axis_sizes": [int(s) for s in mesh.devices.shape],
+        "num_devices": int(mesh.devices.size),
+        "platform": str(mesh.devices.flat[0].platform),
+    }
 
 
 def build_result(
@@ -208,7 +249,7 @@ def build_result(
         "partition": part,
         "seconds": seconds,
         "backend": cfg.backend,
-        "mesh": mesh,
+        "mesh": mesh_description(mesh),
     }
 
 
@@ -257,25 +298,33 @@ class Trainer:
         local_update = make_local_update(make_loss_fn(forward, labels), cfg)
 
         @jax.jit
-        def round_step(gparams, opt_states, server_state, sel):
-            """sel: (K,) float — client-selection weights CS(t) (Algorithm 2)."""
-            stacked_params, new_opt_states = jax.vmap(
+        def round_step(gparams, opt_states, server_state, chosen):
+            """chosen: (n_sel,) int — the clients CS(t) picked this round.
+
+            Only the selected clients are gathered and updated — unselected
+            clients run no compute at all and keep their optimizer state
+            (the pre-gather layout wasted K/n_sel of the local-update work
+            on clients whose params were then zero-weighted away).
+            """
+            sel_opt = jax.tree.map(
+                lambda x: jnp.take(x, chosen, axis=0), opt_states
+            )
+            stacked_params, sel_opt = jax.vmap(
                 local_update, in_axes=(None, 0, 0, 0)
-            )(gparams, opt_states, nb_masks, tr_masks)
-            # unselected clients keep their previous optimizer state
-            keep = sel > 0
+            )(
+                gparams, sel_opt,
+                jnp.take(nb_masks, chosen, axis=0),
+                jnp.take(tr_masks, chosen, axis=0),
+            )
             opt_states = jax.tree.map(
-                lambda new, old: jnp.where(
-                    keep.reshape((K,) + (1,) * (new.ndim - 1)), new, old
-                ),
-                new_opt_states, opt_states,
+                lambda full, new: full.at[chosen].set(new), opt_states, sel_opt
             )
             if cfg.aggregator == "fedadam":
                 new_global, server_state = fedadam_server(
-                    gparams, stacked_params, server_state, cfg.server_lr, weights=sel
+                    gparams, stacked_params, server_state, cfg.server_lr
                 )
             else:
-                new_global = fedavg(stacked_params, weights=sel)
+                new_global = fedavg(stacked_params)
             return new_global, opt_states, server_state
 
         @jax.jit
@@ -291,16 +340,11 @@ class Trainer:
 
         val_curve, test_curve = [], []
         t0 = time.time()
-        sel_rng = np.random.default_rng(cfg.seed + 1)
-        n_sel = max(1, int(round(cfg.client_fraction * K)))
-        for _ in range(cfg.rounds):
-            if n_sel >= K:
-                sel = jnp.ones((K,), jnp.float32)
-            else:
-                chosen = sel_rng.choice(K, size=n_sel, replace=False)
-                sel = jnp.zeros((K,), jnp.float32).at[jnp.asarray(chosen)].set(1.0)
+        _, chosen_sched = selection_schedule(cfg)
+        for t in range(cfg.rounds):
             global_params, opt_states, server_state = round_step(
-                global_params, opt_states, server_state, sel
+                global_params, opt_states, server_state,
+                jnp.asarray(chosen_sched[t]),
             )
             va, ta = evaluate(global_params)
             val_curve.append(float(va))

@@ -1,0 +1,102 @@
+"""Aggregation numerics (ISSUE 2): weighted FedAvg and server-side FedAdam
+are the two places subsampled rounds can silently go wrong — zero-weight
+clients must be EXACT no-ops, weighted means must match hand-computed
+values, and the server Adam step must bias-correct at step 1."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.federated import fedavg, fedadam_server
+from repro.federated.aggregation import fedadam_update
+from repro.optim.adamw import adam_init
+
+
+def stacked(*rows):
+    return {"w": jnp.asarray(np.stack([np.asarray(r, np.float32) for r in rows]))}
+
+
+# ---------------------------------------------------------------------------
+# fedavg(weights=...)
+# ---------------------------------------------------------------------------
+
+def test_fedavg_weighted_matches_hand_computed():
+    s = stacked([1.0, 2.0], [3.0, 6.0], [5.0, 10.0])
+    out = fedavg(s, weights=jnp.asarray([1.0, 2.0, 1.0]))
+    # (1*1 + 2*3 + 1*5)/4 = 3 ; (1*2 + 2*6 + 1*10)/4 = 6
+    np.testing.assert_allclose(np.asarray(out["w"]), [3.0, 6.0])
+
+
+def test_fedavg_zero_weight_client_is_exact_noop():
+    s3 = stacked([1.0], [100.0], [3.0])
+    s2 = stacked([1.0], [3.0])
+    with_zero = fedavg(s3, weights=jnp.asarray([1.0, 0.0, 1.0]))
+    without = fedavg(s2, weights=jnp.asarray([1.0, 1.0]))
+    # 0 * p contributes an exact float zero: results are bitwise equal.
+    np.testing.assert_array_equal(np.asarray(with_zero["w"]), np.asarray(without["w"]))
+
+
+def test_fedavg_uniform_weights_match_unweighted():
+    s = stacked([1.0, 2.0], [3.0, 4.0])
+    np.testing.assert_allclose(
+        np.asarray(fedavg(s, weights=jnp.ones(2))["w"]),
+        np.asarray(fedavg(s)["w"]),
+        rtol=1e-7,
+    )
+
+
+# ---------------------------------------------------------------------------
+# fedadam_server
+# ---------------------------------------------------------------------------
+
+def test_fedadam_zero_weight_client_is_exact_noop():
+    glob = {"w": jnp.asarray([1.0, -1.0])}
+    s3 = stacked([0.0, 0.0], [99.0, -99.0], [2.0, -2.0])
+    s2 = stacked([0.0, 0.0], [2.0, -2.0])
+    n3, st3 = fedadam_server(glob, s3, adam_init(glob),
+                             weights=jnp.asarray([1.0, 0.0, 1.0]))
+    n2, st2 = fedadam_server(glob, s2, adam_init(glob),
+                             weights=jnp.asarray([1.0, 1.0]))
+    np.testing.assert_array_equal(np.asarray(n3["w"]), np.asarray(n2["w"]))
+    np.testing.assert_array_equal(np.asarray(st3.mu["w"]), np.asarray(st2.mu["w"]))
+    np.testing.assert_array_equal(np.asarray(st3.nu["w"]), np.asarray(st2.nu["w"]))
+    assert int(st3.step) == int(st2.step) == 1
+
+
+@pytest.mark.parametrize("server_lr", [0.05, 0.5])
+def test_fedadam_bias_correction_at_step_one(server_lr):
+    """From a fresh state, bias correction cancels b1/b2 exactly: the step-1
+    update is -lr * delta / (|delta| + eps) elementwise."""
+    eps = 1e-6
+    glob = {"w": jnp.asarray([1.0, 0.0, -2.0])}
+    mean = {"w": jnp.asarray([0.5, 0.0, -1.0])}
+    delta = np.asarray([0.5, 0.0, -1.0])  # glob - mean
+    new, state = fedadam_update(glob, mean, adam_init(glob),
+                                server_lr=server_lr, eps=eps)
+    expected = np.asarray(glob["w"]) - server_lr * delta / (np.abs(delta) + eps)
+    np.testing.assert_allclose(np.asarray(new["w"]), expected, rtol=1e-5)
+    assert int(state.step) == 1
+    # mu/nu hold the (uncorrected) first/second moments of delta
+    np.testing.assert_allclose(np.asarray(state.mu["w"]), 0.1 * delta, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(state.nu["w"]), 0.01 * delta**2, rtol=1e-5)
+
+
+def test_fedadam_server_weighted_mean_matches_hand_computed():
+    glob = {"w": jnp.asarray([4.0])}
+    s = stacked([0.0], [8.0])
+    # weighted mean = (3*0 + 1*8)/4 = 2 -> delta = 2
+    new_w, _ = fedadam_server(glob, s, adam_init(glob), server_lr=0.1,
+                              weights=jnp.asarray([3.0, 1.0]))
+    new_u, _ = fedadam_update(glob, {"w": jnp.asarray([2.0])}, adam_init(glob),
+                              server_lr=0.1)
+    np.testing.assert_allclose(np.asarray(new_w["w"]), np.asarray(new_u["w"]), rtol=1e-7)
+
+
+def test_fedadam_server_is_update_on_the_mean():
+    """fedadam_server == fedavg + fedadam_update by construction; guard the
+    decomposition both backends rely on."""
+    glob = {"w": jnp.asarray([1.0, 2.0])}
+    s = stacked([0.0, 1.0], [4.0, 5.0])
+    n1, st1 = fedadam_server(glob, s, adam_init(glob), server_lr=0.2)
+    n2, st2 = fedadam_update(glob, fedavg(s), adam_init(glob), server_lr=0.2)
+    np.testing.assert_array_equal(np.asarray(n1["w"]), np.asarray(n2["w"]))
+    np.testing.assert_array_equal(np.asarray(st1.nu["w"]), np.asarray(st2.nu["w"]))

@@ -176,6 +176,68 @@ def test_run_federated_aggregators(graph):
         assert np.isfinite(res["best_test"])
 
 
+def test_run_federated_aggregators_with_subsampling(graph):
+    """Algorithm 2 CS(t): every aggregator trains under partial participation."""
+    for agg in ("fedavg", "fedprox", "fedadam"):
+        cfg = FederatedConfig(
+            method="fedgat", num_clients=4, rounds=3, local_steps=1,
+            aggregator=agg, client_fraction=0.5,
+            model=FedGATConfig(engine="direct", degree=8),
+        )
+        res = run_federated(graph, cfg)
+        assert np.isfinite(res["best_test"])
+        assert len(res["test_curve"]) == 3
+
+
+def test_selection_schedule_shapes_and_determinism():
+    from repro.federated.trainer import selection_schedule
+
+    cfg = FederatedConfig(num_clients=6, rounds=8, client_fraction=0.5, seed=3)
+    sel, chosen = selection_schedule(cfg)
+    sel2, chosen2 = selection_schedule(cfg)
+    assert sel.shape == (8, 6) and chosen.shape == (8, 3)
+    np.testing.assert_array_equal(sel, sel2)
+    np.testing.assert_array_equal(chosen, chosen2)
+    # exactly ceil-rounded n_sel participants per round, weights are 0/1,
+    # and the two layouts describe the same selection
+    assert set(np.unique(sel)) <= {0.0, 1.0}
+    np.testing.assert_array_equal(sel.sum(axis=1), np.full(8, 3.0))
+    for t in range(8):
+        assert set(np.nonzero(sel[t])[0]) == set(chosen[t])
+    # full participation: all-ones schedule, no RNG consumed
+    sel_full, chosen_full = selection_schedule(FederatedConfig(num_clients=4, rounds=2))
+    np.testing.assert_array_equal(sel_full, np.ones((2, 4), np.float32))
+    np.testing.assert_array_equal(chosen_full, np.broadcast_to(np.arange(4), (2, 4)))
+
+
+def test_comm_report_uses_model_num_layers(graph):
+    from repro.federated.trainer import comm_report
+
+    part = dirichlet_partition(graph.labels, 4, 1.0, 0)
+    cfg2 = FederatedConfig(model=FedGATConfig(engine="direct", num_layers=2))
+    cfg3 = FederatedConfig(model=FedGATConfig(engine="direct", num_layers=3))
+    rep2 = comm_report(cfg2, graph, part)
+    rep3 = comm_report(cfg3, graph, part)
+    assert rep2.download_scalars == matrix_comm_cost(graph, part, num_layers=2).download_scalars
+    assert rep3.download_scalars == matrix_comm_cost(graph, part, num_layers=3).download_scalars
+    # a deeper model ships packs for a wider halo
+    assert rep3.download_scalars >= rep2.download_scalars
+
+
+def test_mesh_description_is_serializable():
+    import json
+
+    from jax.sharding import Mesh
+    from repro.federated.trainer import mesh_description
+
+    assert mesh_description(None) is None
+    mesh = Mesh(np.array(jax.devices()[:1]), ("clients",))
+    desc = mesh_description(mesh)
+    assert desc["axis_names"] == ["clients"]
+    assert desc["axis_sizes"] == [1] and desc["num_devices"] == 1
+    json.dumps(desc)  # must be JSON-clean for benchmark dumps
+
+
 def test_centralized_training_learns(graph):
     res = train_centralized(graph, "gat", steps=120)
     assert res["best_test"] > 0.5  # tiny SBM is easy; must beat chance (1/3)

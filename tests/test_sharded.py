@@ -1,5 +1,6 @@
-"""shard_map backend: must reproduce the vmap backend's trajectory AND
-report the same metrics through the unified result schema.
+"""shard_map backend: must reproduce the vmap backend's trajectory for
+EVERY supported (aggregator, client_fraction) combination AND report the
+same metrics through the unified result schema.
 
 Runs in a subprocess because the client-per-device layout needs
 XLA_FLAGS=--xla_force_host_platform_device_count, which must be set before
@@ -10,6 +11,7 @@ import subprocess
 import sys
 
 SCRIPT = r"""
+import json, pickle
 import numpy as np, jax
 from repro.graphs import make_cora_like
 from repro.federated import FederatedConfig, run_federated
@@ -18,22 +20,38 @@ from repro.core import FedGATConfig
 
 assert len(jax.devices()) == 4, jax.devices()
 g = make_cora_like('tiny', 0)
-cfg = FederatedConfig(method='fedgat', num_clients=4, rounds=6, local_steps=2,
-                      model=FedGATConfig(engine='direct', degree=10))
-r1 = run_federated(g, cfg, backend='vmap')
-r2 = run_federated(g, cfg, backend='shard_map')
-np.testing.assert_allclose(r1['test_curve'], r2['test_curve'], atol=1e-6)
-np.testing.assert_allclose(r1['val_curve'], r2['val_curve'], atol=1e-6)
-diff = max(float(abs(a - b).max())
-           for a, b in zip(jax.tree.leaves(r1['params']), jax.tree.leaves(r2['params'])))
-assert diff < 5e-3, diff
 
-# Unified result schema: identical keys, identical reported metrics.
-assert set(r1) == set(r2), set(r1) ^ set(r2)
-assert r1['backend'] == 'vmap' and r2['backend'] == 'shard_map'
-for k in ('best_val', 'best_test', 'final_test'):
-    assert abs(r1[k] - r2[k]) < 1e-6, (k, r1[k], r2[k])
-assert r1['comm'].download_scalars == r2['comm'].download_scalars
+# --- full parity grid: every aggregator x every participation level -------
+for agg in ('fedavg', 'fedprox', 'fedadam'):
+    for frac in (1.0, 0.5):
+        cfg = FederatedConfig(method='fedgat', num_clients=4, rounds=5,
+                              local_steps=2, aggregator=agg,
+                              client_fraction=frac,
+                              model=FedGATConfig(engine='direct', degree=10))
+        r1 = run_federated(g, cfg, backend='vmap')
+        r2 = run_federated(g, cfg, backend='shard_map')
+        tag = (agg, frac)
+        np.testing.assert_allclose(r1['test_curve'], r2['test_curve'],
+                                   atol=1e-6, err_msg=str(tag))
+        np.testing.assert_allclose(r1['val_curve'], r2['val_curve'],
+                                   atol=1e-6, err_msg=str(tag))
+        diff = max(float(abs(a - b).max())
+                   for a, b in zip(jax.tree.leaves(r1['params']),
+                                   jax.tree.leaves(r2['params'])))
+        assert diff < 5e-3, (tag, diff)
+        # Unified result schema: identical keys, identical reported metrics.
+        assert set(r1) == set(r2), set(r1) ^ set(r2)
+        assert r1['backend'] == 'vmap' and r2['backend'] == 'shard_map'
+        for k in ('best_val', 'best_test', 'final_test'):
+            assert abs(r1[k] - r2[k]) < 1e-6, (tag, k, r1[k], r2[k])
+        assert r1['comm'].download_scalars == r2['comm'].download_scalars
+
+# --- results serialise: mesh is a description, not a live Mesh ------------
+assert r1['mesh'] is None
+assert r2['mesh'] == {'axis_names': ['clients'], 'axis_sizes': [4],
+                      'num_devices': 4, 'platform': 'cpu'}, r2['mesh']
+json.dumps(r2['mesh'])
+pickle.loads(pickle.dumps({k: v for k, v in r2.items() if k != 'params'}))
 
 # DistGAT path also lowers through shard_map (via the legacy wrapper).
 cfg2 = FederatedConfig(method='distgat', num_clients=4, rounds=3, local_steps=1)
