@@ -52,6 +52,7 @@ def figure_cli(
     name: str,
     max_clients: Callable[[bool], int],
     argv: List[str] | None = None,
+    default_dataset: str = "cora_like",
 ) -> None:
     """Shared ``--backend``-aware entry point for the figure scripts.
 
@@ -63,7 +64,7 @@ def figure_cli(
     ap.add_argument("--backend", choices=BACKEND_CHOICES, default="vmap",
                     help="federated Trainer backend (default: vmap)")
     ap.add_argument("--fast", action="store_true", help="reduced sweeps")
-    ap.add_argument("--dataset", default="cora_like")
+    ap.add_argument("--dataset", default=default_dataset)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.backend == "shard_map":

@@ -1,19 +1,46 @@
 """Figure 5: FedGAT accuracy vs Chebyshev approximation degree (iid,
 partial-iid, non-iid). The paper observes near-flat accuracy from degree 8
-up, because the Chebyshev error is already small at low degree."""
+up, because the Chebyshev error is already small at low degree.
+
+Driven through the unified ``Trainer`` facade; ``--backend shard_map``
+runs the identical sweep with one client per device (host devices are
+forced automatically when run as a script).
+
+  PYTHONPATH=src python benchmarks/fig5_degree.py [--fast] [--backend shard_map]
+"""
 from __future__ import annotations
 
+import pathlib
+import sys
 from typing import Dict, List
 
-from repro.core import FedGATConfig
-from repro.federated import FederatedConfig, run_federated
-from repro.graphs import make_cora_like
+if __package__ in (None, ""):  # run as a script: wire repo root + src
+    _root = pathlib.Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(_root / "src"))
+    sys.path.insert(0, str(_root))
+
+from benchmarks.common import figure_cli
 
 DEGREES = (4, 8, 16, 32)
 BETAS = {"non-iid": 1.0, "partial-iid": 100.0, "iid": 10_000.0}
+NUM_CLIENTS = 10
 
 
-def run(fast: bool = False, dataset: str = "cora_like", seed: int = 0) -> List[Dict]:
+def max_clients(fast: bool) -> int:
+    return NUM_CLIENTS
+
+
+def run(
+    fast: bool = False,
+    dataset: str = "cora_like",
+    seed: int = 0,
+    backend: str = "vmap",
+) -> List[Dict]:
+    # repro imports are deferred so the CLI can force host devices first.
+    from repro.core import FedGATConfig
+    from repro.federated import FederatedConfig, Trainer
+    from repro.graphs import make_cora_like
+
     degrees = (8, 16) if fast else DEGREES
     betas = {"non-iid": 1.0, "iid": 10_000.0} if fast else BETAS
     rounds = 25 if fast else 45
@@ -22,13 +49,13 @@ def run(fast: bool = False, dataset: str = "cora_like", seed: int = 0) -> List[D
     for setting, beta in betas.items():
         for p in degrees:
             cfg = FederatedConfig(
-                method="fedgat", num_clients=10, beta=beta, rounds=rounds,
-                local_steps=3, lr=0.02, seed=seed,
+                method="fedgat", backend=backend, num_clients=NUM_CLIENTS,
+                beta=beta, rounds=rounds, local_steps=3, lr=0.02, seed=seed,
                 model=FedGATConfig(engine="direct", degree=p),
             )
-            res = run_federated(g, cfg)
+            res = Trainer(cfg).run(g)
             rows.append({"dataset": dataset, "setting": setting, "degree": p,
-                         "acc": res["best_test"]})
+                         "backend": backend, "acc": res["best_test"]})
     return rows
 
 
@@ -41,3 +68,7 @@ def derived(rows: List[Dict]) -> str:
         if accs:
             spreads.append(max(accs) - min(accs))
     return f"max_acc_spread_over_degrees={max(spreads):.3f} (paper: near-flat)"
+
+
+if __name__ == "__main__":
+    figure_cli(run, derived, "fig5_degree", max_clients)

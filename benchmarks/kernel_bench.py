@@ -2,33 +2,53 @@
 oracle, plus the jnp oracle's own wall time as the CPU throughput line.
 On-TPU performance is roofline-derived (EXPERIMENTS.md §Roofline) — these
 numbers validate correctness paths and give the CPU-container baseline.
+
+cheb_attn rows cover the head-batched grid (all H heads in ONE
+``pallas_call`` vs the old per-head launch loop) and autotuned vs default
+block sizes.
+
+  PYTHONPATH=src python benchmarks/kernel_bench.py [--fast]
 """
 from __future__ import annotations
 
+import pathlib
+import sys
 from typing import Dict, List
+
+if __package__ in (None, ""):  # run as a script: wire repo root + src
+    _root = pathlib.Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(_root / "src"))
+    sys.path.insert(0, str(_root))
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import timed
-from repro.kernels import cheb_attn, flash_attn, poly_attn, ref
+from repro.core.chebyshev import attention_series
+from repro.kernels import cheb_attn, flash_attn, poly_attn, ref, select_block_sizes
 
 
-def run(fast: bool = False) -> List[Dict]:
+def _legal_block(block: int, dim: int) -> int:
+    """Largest block <= ``block`` that divides ``dim`` (halving), for the
+    direct cheb_attn calls below — unlike cheb_attn_layer they do not pad,
+    so e.g. a REPRO_CHEB_BLOCK_N override must be snapped to a divisor."""
+    block = min(block, dim)
+    while dim % block:
+        block //= 2
+    return max(block, 1)
+
+
+def _cheb_rows(fast: bool) -> List[Dict]:
     rows = []
     key = jax.random.PRNGKey(0)
-
-    # cheb_attn: FedGAT-scale graph aggregation
     n, b, d = (128, 16, 128) if fast else (512, 32, 128)
-    x = jnp.clip(jax.random.normal(key, (n, b)), -3.5, 3.5)
+    coeffs = jnp.asarray(attention_series(16, (-4.0, 4.0)), jnp.float32)
     h = jax.random.normal(jax.random.PRNGKey(1), (n, b, d))
     m = jnp.ones((n, b))
-    # real attention series (positive on the domain -> well-conditioned den)
-    from repro.core.chebyshev import attention_series
 
-    coeffs = jnp.asarray(attention_series(16, (-4.0, 4.0)), jnp.float32)
-
+    # single-head baseline: jnp oracle vs the default-block kernel
+    x = jnp.clip(jax.random.normal(key, (n, b)), -3.5, 3.5)
     ref_fn = jax.jit(ref.cheb_attn_ref)
     ref_fn(x, h, m, coeffs)
     _, us_ref = timed(lambda: jax.block_until_ready(ref_fn(x, h, m, coeffs)))
@@ -39,8 +59,71 @@ def run(fast: bool = False) -> List[Dict]:
     rows.append({"kernel": "cheb_attn", "shape": f"N{n}xB{b}xD{d}p16",
                  "us_ref_jnp": us_ref, "us_pallas_interpret": us_krn, "max_err": err})
 
+    # autotune vs default: a ragged citation-graph layer shape (D=48 does
+    # not divide the 128 default, so default pads 48->128 while the tuner
+    # picks a tighter feature tile) through the full cheb_attn_layer path
+    ln, ld, lB, lH, lo = (128, 48, 16, 8, 8) if fast else (320, 48, 16, 8, 8)
+    lh = jax.random.normal(jax.random.PRNGKey(6), (ln, ld))
+    nbr_idx = jax.random.randint(jax.random.PRNGKey(7), (ln, lB), 0, ln)
+    nbr_mask = jnp.ones((ln, lB), bool)
+    params = {
+        "W": jax.random.normal(jax.random.PRNGKey(8), (lH, ld, lo)) * 0.2,
+        "a1": jax.random.normal(jax.random.PRNGKey(9), (lH, lo)) * 0.2,
+        "a2": jax.random.normal(jax.random.PRNGKey(10), (lH, lo)) * 0.2,
+    }
+    from repro.core.poly_attention import poly_gat_layer
+    from repro.kernels.ops import cheb_attn_layer
+
+    def layer(bn=None, bd=None):
+        return cheb_attn_layer(params, coeffs, lh, nbr_idx, nbr_mask,
+                               block_n=bn, block_d=bd)
+
+    layer(128, 128)                                               # compile
+    out_auto = layer()                                            # compile
+    _, us_def = timed(lambda: jax.block_until_ready(layer(128, 128)))
+    _, us_auto = timed(lambda: jax.block_until_ready(layer()))
+    abn, abd = select_block_sizes(ln, lB, ld, heads=lH, interpret=True)
+    err = float(jnp.abs(
+        out_auto - poly_gat_layer(params, coeffs, lh, nbr_idx, nbr_mask)
+    ).max())
+    rows.append({"kernel": "cheb_attn_layer", "shape": f"N{ln}xB{lB}xD{ld}H{lH}p16",
+                 "us_default_128x128": us_def, "us_autotune": us_auto,
+                 "autotune_blocks": f"{abn}x{abd}", "max_err": err})
+
+    # head-batched: ONE pallas_call for all H heads vs a per-head loop
+    heads = (4,) if fast else (4, 8)
+    for H in heads:
+        xh = jnp.clip(jax.random.normal(jax.random.PRNGKey(2), (H, n, b)), -3.5, 3.5)
+        abn, abd = select_block_sizes(n, b, d, heads=H, interpret=True)
+        abn, abd = _legal_block(abn, n), _legal_block(abd, d)
+
+        def batched():
+            return cheb_attn(xh, h, m, coeffs, block_n=abn, block_d=abd)
+
+        def per_head_loop():
+            return jnp.stack([
+                cheb_attn(xh[i], h, m, coeffs, block_n=abn, block_d=abd)
+                for i in range(H)
+            ])
+
+        out_b = batched()                                          # compile
+        per_head_loop()                                            # compile
+        _, us_batched = timed(lambda: jax.block_until_ready(batched()))
+        _, us_loop = timed(lambda: jax.block_until_ready(per_head_loop()))
+        want = jnp.stack([ref.cheb_attn_ref(xh[i], h, m, coeffs) for i in range(H)])
+        err = float(jnp.abs(out_b - want).max())
+        rows.append({"kernel": "cheb_attn_heads", "shape": f"H{H}xN{n}xB{b}xD{d}p16",
+                     "us_head_batched": us_batched, "us_per_head_loop": us_loop,
+                     "autotune_blocks": f"{abn}x{abd}", "max_err": err})
+    return rows
+
+
+def run(fast: bool = False) -> List[Dict]:
+    rows = _cheb_rows(fast)
+
     # flash_attn
     B, H, S, hd = (1, 2, 256, 64) if fast else (2, 4, 512, 64)
+    key = jax.random.PRNGKey(0)
     q = jax.random.normal(key, (B, H, S, hd))
     k = jax.random.normal(jax.random.PRNGKey(2), (B, H, S, hd))
     v = jax.random.normal(jax.random.PRNGKey(3), (B, H, S, hd))
@@ -55,8 +138,6 @@ def run(fast: bool = False) -> List[Dict]:
                  "us_ref_jnp": us_ref, "us_pallas_interpret": us_krn, "max_err": err})
 
     # poly_attn
-    from repro.core.chebyshev import attention_series
-
     a1 = jax.random.normal(jax.random.PRNGKey(4), (H, hd)) * 0.1
     a2 = jax.random.normal(jax.random.PRNGKey(5), (H, hd)) * 0.1
     pc = jnp.asarray(attention_series(8, (-4.0, 4.0)), jnp.float32)
@@ -75,3 +156,20 @@ def run(fast: bool = False) -> List[Dict]:
 def derived(rows: List[Dict]) -> str:
     worst = max(r["max_err"] for r in rows)
     return f"kernels={len(rows)} worst_err={worst:.2e} (interpret-mode validation)"
+
+
+if __name__ == "__main__":
+    import argparse
+    import time
+
+    from benchmarks.common import csv_row, save_results
+
+    ap = argparse.ArgumentParser(description="kernel micro-bench")
+    ap.add_argument("--fast", action="store_true", help="reduced shapes")
+    args = ap.parse_args()
+    t0 = time.perf_counter()
+    rows = run(fast=args.fast)
+    us = (time.perf_counter() - t0) * 1e6
+    save_results("kernel_bench", rows)
+    print("name,us_per_call,derived")
+    print(csv_row("kernel_bench", us, derived(rows)), flush=True)

@@ -1,22 +1,54 @@
 """Table 1: test accuracy of GCN / GAT (centralised) and DistGAT / FedGCN /
-FedGAT (10 clients, iid + non-iid) on the synthetic citation stand-ins."""
+FedGAT (10 clients, iid + non-iid) on the synthetic citation stand-ins.
+
+Federated rows are driven through the unified ``Trainer`` facade;
+``--backend shard_map`` runs the identical sweep with one client per
+device (host devices are forced automatically when run as a script).
+
+  PYTHONPATH=src python benchmarks/table1_accuracy.py [--fast] [--backend shard_map]
+"""
 from __future__ import annotations
 
+import pathlib
+import sys
 from typing import Dict, List
 
-import numpy as np
+if __package__ in (None, ""):  # run as a script: wire repo root + src
+    _root = pathlib.Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(_root / "src"))
+    sys.path.insert(0, str(_root))
 
-from repro.core import FedGATConfig
-from repro.federated import FederatedConfig, run_federated, train_centralized
-from repro.graphs import make_cora_like
+from benchmarks.common import figure_cli
 
 DATASETS = ("cora_like", "citeseer_like", "pubmed_like")
 BETAS = {"non-iid": 1.0, "iid": 10_000.0}
+NUM_CLIENTS = 10
 
 
-def run(fast: bool = False, seeds=(0, 1)) -> List[Dict]:
-    datasets = DATASETS[:1] if fast else DATASETS
-    seeds = seeds[:1] if fast else seeds
+def max_clients(fast: bool) -> int:
+    return NUM_CLIENTS
+
+
+def run(
+    fast: bool = False,
+    dataset: str = "all",
+    seed: int = 0,
+    backend: str = "vmap",
+    seeds=None,
+) -> List[Dict]:
+    # repro imports are deferred so the CLI can force host devices first.
+    import numpy as np
+
+    from repro.core import FedGATConfig
+    from repro.federated import FederatedConfig, Trainer, train_centralized
+    from repro.graphs import make_cora_like
+
+    datasets = DATASETS if dataset == "all" else (dataset,)
+    if seeds is None:
+        seeds = (seed, seed + 1)
+    if fast:
+        datasets = datasets[:1]
+        seeds = seeds[:1]
     rounds = 25 if fast else 70
     rows: List[Dict] = []
     for ds in datasets:
@@ -26,6 +58,7 @@ def run(fast: bool = False, seeds=(0, 1)) -> List[Dict]:
                 g = make_cora_like(ds, seed=s)
                 accs.append(train_centralized(g, kind, steps=2 * rounds, seed=s)["best_test"])
             rows.append({"dataset": ds, "method": name, "setting": "central",
+                         "backend": "central",
                          "acc": float(np.mean(accs)), "std": float(np.std(accs))})
         for method in ("distgat", "fedgcn", "fedgat"):
             for setting, beta in BETAS.items():
@@ -33,22 +66,29 @@ def run(fast: bool = False, seeds=(0, 1)) -> List[Dict]:
                 for s in seeds:
                     g = make_cora_like(ds, seed=s)
                     cfg = FederatedConfig(
-                        method=method, num_clients=10, beta=beta, rounds=rounds,
-                        local_steps=3, seed=s,
+                        method=method, backend=backend, num_clients=NUM_CLIENTS,
+                        beta=beta, rounds=rounds, local_steps=3, seed=s,
                         lr=0.03 if method == "fedgcn" else 0.02,
                         model=FedGATConfig(engine="direct", degree=16),
                     )
-                    accs.append(run_federated(g, cfg)["best_test"])
+                    accs.append(Trainer(cfg).run(g)["best_test"])
                 rows.append({"dataset": ds, "method": method,
                              "setting": f"10 clients, {setting}",
+                             "backend": backend,
                              "acc": float(np.mean(accs)), "std": float(np.std(accs))})
     return rows
 
 
 def derived(rows: List[Dict]) -> str:
+    import numpy as np
+
     def acc(m, ds="cora_like"):
         vals = [r["acc"] for r in rows if r["method"] == m and r["dataset"] == ds]
         return float(np.mean(vals)) if vals else float("nan")
 
     return (f"cora GAT={acc('GAT'):.3f} fedgat={acc('fedgat'):.3f} "
             f"distgat={acc('distgat'):.3f} fedgcn={acc('fedgcn'):.3f}")
+
+
+if __name__ == "__main__":
+    figure_cli(run, derived, "table1_accuracy", max_clients, default_dataset="all")

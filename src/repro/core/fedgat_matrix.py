@@ -169,7 +169,11 @@ def fedgat_layer_matrix(
     b1, b2 = head_projections(params)
     D = build_D(pack, h, b1, b2)
     SE, SF = series_moments(pack, D, coeffs, basis=basis, domain=domain)
-    agg = SE / SF[..., None]                                   # (H, N, d_in)
+    # Isolated nodes have all-zero pack slots, so both moments are exactly
+    # zero: aggregate to zero instead of 0/0 NaN (same guard as the
+    # direct/kernel engines — cross-engine parity on degree-0 nodes).
+    ok = SF[..., None] != 0
+    agg = jnp.where(ok, SE / jnp.where(ok, SF[..., None], 1.0), 0.0)  # (H, N, d_in)
     out = jnp.einsum("hnd,hdo->hno", agg, params["W"])
     if concat:
         return jnp.transpose(out, (1, 0, 2)).reshape(h.shape[0], -1)

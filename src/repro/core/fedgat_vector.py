@@ -117,7 +117,10 @@ def fedgat_layer_vector(
     """Approximate first-layer GAT update, Vector FedGAT engine."""
     b1, b2 = head_projections(params)
     SE, SF = vector_series(pack, h, b1, b2, coeffs, basis=basis, domain=domain)
-    agg = SE / SF[..., None]
+    # Same den != 0 guard as the matrix/direct/kernel engines: isolated
+    # nodes (all pack slots zero) aggregate to exact zeros, never 0/0.
+    ok = SF[..., None] != 0
+    agg = jnp.where(ok, SE / jnp.where(ok, SF[..., None], 1.0), 0.0)
     out = jnp.einsum("hnd,hdo->hno", agg, params["W"])
     if concat:
         return jnp.transpose(out, (1, 0, 2)).reshape(h.shape[0], -1)

@@ -83,9 +83,13 @@ def poly_gat_layer(
     x = edge_scores(b1, b2, h, nbr_idx)                      # (H, N, B)
     e = eval_series(coeffs, x, basis, domain)
     e = e * nbr_mask[None].astype(e.dtype)
-    den = jnp.sum(e, axis=-1)                                # (H, N)
+    den = jnp.sum(e, axis=-1)[..., None]                     # (H, N, 1)
     num = jnp.einsum("hnb,nbd->hnd", e, h[nbr_idx])          # (H, N, d_in)
-    agg = num / den[..., None]
+    # Isolated/fully-masked rows sum to exactly zero: aggregate to zero
+    # instead of 0/0 NaN — the same guard as the kernel engine (ref.py),
+    # keeping kernel/direct parity on degree-0 nodes.
+    ok = den != 0
+    agg = jnp.where(ok, num / jnp.where(ok, den, 1.0), 0.0)
     out = jnp.einsum("hnd,hdo->hno", agg, params["W"])       # (H, N, d_out)
     if concat:
         return jnp.transpose(out, (1, 0, 2)).reshape(h.shape[0], -1)

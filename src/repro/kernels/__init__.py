@@ -1,5 +1,11 @@
 from repro.kernels import ops, ref
-from repro.kernels.cheb_attn import cheb_attn
+from repro.kernels.cheb_attn import cheb_attn, cheb_attn_diff
 from repro.kernels.flash_attn import flash_attn
+from repro.kernels.ops import (
+    cheb_attn_layer,
+    clear_block_cache,
+    resolve_interpret,
+    select_block_sizes,
+)
 from repro.kernels.poly_attn import poly_attn
 from repro.kernels.wkv_chunk import wkv_chunked

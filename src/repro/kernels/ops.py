@@ -1,4 +1,5 @@
-"""jit'd wrappers exposing the Pallas kernels to the rest of the stack."""
+"""jit'd wrappers exposing the Pallas kernels to the rest of the stack,
+plus the per-shape block-size autotuner for the FedGAT aggregation kernel."""
 from __future__ import annotations
 
 import os
@@ -7,7 +8,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.cheb_attn import cheb_attn
+from repro.kernels.cheb_attn import cheb_attn, cheb_attn_diff
 from repro.kernels.flash_attn import flash_attn
 from repro.kernels.poly_attn import poly_attn
 from repro.kernels import ref
@@ -30,6 +31,102 @@ def resolve_interpret(interpret: Optional[bool] = None) -> bool:
     return jax.default_backend() != "tpu"
 
 
+# ---------------------------------------------------------------------------
+# Block-size autotuning for cheb_attn
+# ---------------------------------------------------------------------------
+
+# Candidate tile edges: MXU/VPU-friendly powers of two down to the f32
+# sublane width. The layer pads N and D up to the chosen multiples, so any
+# candidate is legal for any shape.
+_BLOCK_CANDIDATES = (128, 64, 32, 16, 8)
+# Per-block VMEM footprint budget (x + mask + h + out tiles, f32, double
+# buffered) — stay well under the ~16 MiB/core VMEM.
+_VMEM_BUDGET_BYTES = 4 * 1024 * 1024
+# Estimated fixed cost per grid step, in "padded-element work" units. Grid
+# steps are nearly free when compiled but are Python-level iterations in
+# interpret mode, so interpret weighs them much heavier — the tuner then
+# prefers the coarsest legal grid.
+_STEP_OVERHEAD = {False: 2_048, True: 262_144}
+
+_BLOCK_CACHE: Dict[Tuple, Tuple[int, int]] = {}
+
+
+def _pad_to(v: int, multiple: int) -> int:
+    return -(-v // multiple) * multiple
+
+
+def select_block_sizes(
+    n: int, b: int, d: int, heads: int = 1, *, interpret: bool = True
+) -> Tuple[int, int]:
+    """Choose ``(block_n, block_d)`` for :func:`cheb_attn` given the shape.
+
+    A pure-Python cost model over the candidate tile grid: total padded
+    work (the layer pads N→block_n and D→block_d multiples, so oversized
+    tiles waste compute) plus a per-grid-step launch overhead (weighted
+    heavily in interpret mode), subject to a VMEM footprint budget.
+    Memoised per process; ``REPRO_CHEB_BLOCK_N`` / ``REPRO_CHEB_BLOCK_D``
+    env vars override either edge VERBATIM (validated as positive ints,
+    but exempt from the VMEM budget and divisibility checks — the
+    padding-layer consumer, :func:`cheb_attn_layer`, accepts any positive
+    block; callers invoking :func:`cheb_attn` directly must snap the
+    result to divisors of their unpadded shape themselves).
+    """
+    def _env_block(var: str) -> Optional[int]:
+        raw = os.environ.get(var, "").strip()
+        if not raw:
+            return None
+        try:
+            v = int(raw)
+        except ValueError:
+            raise ValueError(f"{var}={raw!r}: must be a positive integer") from None
+        if v <= 0:
+            raise ValueError(f"{var}={raw!r}: must be a positive integer")
+        return v
+
+    env_n = _env_block("REPRO_CHEB_BLOCK_N")
+    env_d = _env_block("REPRO_CHEB_BLOCK_D")
+    key = (n, b, d, heads, bool(interpret), env_n, env_d)
+    hit = _BLOCK_CACHE.get(key)
+    if hit is not None:
+        return hit
+
+    overhead = _STEP_OVERHEAD[bool(interpret)]
+    best, best_cost = None, None
+    for bn in _BLOCK_CANDIDATES:
+        for bd in _BLOCK_CANDIDATES:
+            vmem = 4 * (bn * b          # x tile
+                        + bn * b        # mask tile
+                        + bn * b * bd   # h tile
+                        + bn * bd)      # out tile
+            if vmem > _VMEM_BUDGET_BYTES:
+                continue
+            pn, pd = _pad_to(n, bn), _pad_to(d, bd)
+            steps = heads * (pn // bn) * (pd // bd)
+            work = heads * pn * b * pd
+            cost = work + steps * overhead
+            # Tie-break toward coarser tiles (fewer, larger DMAs).
+            if best_cost is None or cost < best_cost or (
+                cost == best_cost and bn * bd > best[0] * best[1]
+            ):
+                best, best_cost = (bn, bd), cost
+    assert best is not None  # the (8, 8) candidate always fits the budget
+    if env_n is not None:
+        best = (env_n, best[1])
+    if env_d is not None:
+        best = (best[0], env_d)
+    _BLOCK_CACHE[key] = best
+    return best
+
+
+def clear_block_cache() -> None:
+    """Drop the autotune memo (tests / after env override changes)."""
+    _BLOCK_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# FedGAT layer-1 via the fused kernel
+# ---------------------------------------------------------------------------
+
 def cheb_attn_layer(
     params: Dict,
     coeffs: Array,
@@ -41,11 +138,18 @@ def cheb_attn_layer(
     domain: Tuple[float, float] = (-4.0, 4.0),
     concat: bool = True,
     interpret: Optional[bool] = None,
+    block_n: Optional[int] = None,
+    block_d: Optional[int] = None,
 ) -> Array:
     """FedGAT layer-1 via the fused Pallas kernel ("kernel" engine).
 
-    Pads N and d to kernel block multiples, evaluates per head, and applies
-    the output projection W — numerically the direct oracle (ref.py).
+    Pads N and d to block multiples (``block_n``/``block_d`` when given,
+    autotuned per shape otherwise), aggregates ALL heads in one
+    head-batched ``pallas_call``, and applies the output projection W —
+    numerically the direct oracle (ref.py). Differentiable: the forward is
+    the kernel, the backward is the guarded oracle math (``custom_vjp``).
+    Padding rows are fully masked and come out as exact zeros (no fake
+    neighbours needed), as do genuinely isolated nodes.
     """
     if basis != "power":
         raise ValueError("kernel engine evaluates the monomial (power) basis")
@@ -55,30 +159,39 @@ def cheb_attn_layer(
     n, d = h.shape
     b1, b2 = head_projections(params)
     x = edge_scores(b1, b2, h, nbr_idx)                  # (H, N, B)
-    h_nb = h[nbr_idx] * nbr_mask[..., None].astype(h.dtype)  # (N, B, d)
+    mask_f = nbr_mask.astype(h.dtype)                    # (N, B)
+    h_nb = h[nbr_idx] * mask_f[..., None]                # (N, B, d)
 
-    bn = 8
-    bd = 128 if d % 128 == 0 else (8 if d % 8 == 0 else 1)
-    pad_n = (-n) % bn
-    pad_d = (-d) % bd
+    if block_n is None or block_d is None:
+        auto_n, auto_d = select_block_sizes(
+            n, x.shape[-1], d, heads=x.shape[0], interpret=interp
+        )
+        block_n = block_n or auto_n
+        block_d = block_d or auto_d
+    pad_n = (-n) % block_n
+    pad_d = (-d) % block_d
     xp = jnp.pad(x, ((0, 0), (0, pad_n), (0, 0)))
     hp = jnp.pad(h_nb, ((0, pad_n), (0, 0), (0, pad_d)))
-    mp = jnp.pad(nbr_mask, ((0, pad_n), (0, 0)))
-    # padded rows: give them one fake valid neighbour to avoid 0/0
-    if pad_n:
-        mp = mp.at[n:, 0].set(True)
+    mp = jnp.pad(mask_f, ((0, pad_n), (0, 0)))           # padded rows: den=0 -> 0
 
-    outs = []
-    for hd_i in range(x.shape[0]):                        # per attention head
-        agg = cheb_attn(
-            xp[hd_i], hp, mp, jnp.asarray(coeffs, jnp.float32),
-            block_n=bn, block_d=bd, interpret=interp,
-        )[:n, :d]
-        outs.append(agg @ params["W"][hd_i])
-    out = jnp.stack(outs, axis=0)                          # (H, N, d_out)
+    agg = cheb_attn_diff(
+        xp, hp, mp, jnp.asarray(coeffs, jnp.float32),
+        min(block_n, n + pad_n), min(block_d, d + pad_d), interp,
+    )[:, :n, :d]                                          # (H, N, d)
+    out = jnp.einsum("hnd,hdo->hno", agg, params["W"])    # (H, N, d_out)
     if concat:
         return jnp.transpose(out, (1, 0, 2)).reshape(n, -1)
     return out.mean(axis=0)
 
 
-__all__ = ["cheb_attn", "flash_attn", "poly_attn", "cheb_attn_layer", "ref", "resolve_interpret"]
+__all__ = [
+    "cheb_attn",
+    "cheb_attn_diff",
+    "flash_attn",
+    "poly_attn",
+    "cheb_attn_layer",
+    "ref",
+    "resolve_interpret",
+    "select_block_sizes",
+    "clear_block_cache",
+]

@@ -12,17 +12,20 @@ Array = jax.Array
 def cheb_attn_ref(x: Array, h_nb: Array, mask: Array, coeffs: Array) -> Array:
     """Fused polynomial-attention graph aggregation (FedGAT Eq. 7).
 
-    x: (N, B) per-edge scores; h_nb: (N, B, D) neighbour features;
-    mask: (N, B); coeffs: (p+1,) monomial coefficients.
-    Returns (N, D): sum_j e_ij h_j / sum_j e_ij with e = sum_n q_n x^n.
+    x: (N, B) or head-batched (H, N, B) per-edge scores; h_nb: (N, B, D)
+    neighbour features (shared across heads); mask: (N, B); coeffs: (p+1,)
+    monomial coefficients. Returns (N, D) / (H, N, D):
+    sum_j e_ij h_j / sum_j e_ij with e = sum_n q_n x^n. Isolated /
+    fully-masked rows (den == 0) return exact zeros, matching the kernel.
     """
     e = jnp.zeros_like(x)
     for qn in coeffs[::-1]:
         e = e * x + qn                          # Horner
     e = e * mask.astype(x.dtype)
-    num = jnp.einsum("nb,nbd->nd", e, h_nb)
+    num = jnp.einsum("...nb,nbd->...nd", e, h_nb)
     den = jnp.sum(e, axis=-1, keepdims=True)
-    return num / den
+    ok = den != 0
+    return jnp.where(ok, num / jnp.where(ok, den, 1.0), 0.0)
 
 
 def flash_attn_ref(

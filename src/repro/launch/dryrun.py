@@ -1,11 +1,13 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    # A pre-set count (e.g. a test harness wanting a small mesh) wins.
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
 
 """Multi-pod dry-run: prove every (arch x input-shape x mesh) lowers and
 compiles on the production meshes, and extract the roofline inputs.
 
 MUST set XLA_FLAGS before any jax import (device count locks on first
-backend init) — hence the module's first two lines.
+backend init) — hence the module's first lines.
 
 Usage:
   python -m repro.launch.dryrun --arch yi-6b --shape train_4k
@@ -35,10 +37,13 @@ from repro.launch.steps import build_sharded_step
 
 
 def run_one(arch: str, shape_name: str, multi_pod: bool, save_hlo: str | None = None,
-            strategy: str = "megatron") -> dict:
-    cfg = get_config(arch)
-    shape = INPUT_SHAPES[shape_name]
-    mesh = make_production_mesh(multi_pod=multi_pod)
+            strategy: str = "megatron", *, mesh=None, cfg=None, shape=None) -> dict:
+    """One (arch, shape, mesh) record. ``mesh``/``cfg``/``shape`` override
+    the production defaults so tests can dry-run reduced configs on a small
+    host mesh while exercising the exact record schema."""
+    cfg = get_config(arch) if cfg is None else cfg
+    shape = INPUT_SHAPES[shape_name] if shape is None else shape
+    mesh = make_production_mesh(multi_pod=multi_pod) if mesh is None else mesh
     chips = mesh.devices.size
     rec = {
         "arch": arch,
