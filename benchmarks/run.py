@@ -4,27 +4,55 @@ Prints ``name,us_per_call,derived`` CSV (us_per_call = wall time of the
 whole experiment; derived = the experiment's headline numbers), and writes
 full row dumps to benchmarks/results/<name>.json.
 
+Figure modules are DISCOVERED, not listed: every ``benchmarks/*.py`` that
+exposes a ``run(fast=...)`` / ``derived(rows)`` pair is a benchmark (the
+modules defer their heavy repro imports into ``run()``, so discovery stays
+cheap). Adding a figure is a one-file change; there is no second registry
+to keep in sync.
+
   PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
 """
 from __future__ import annotations
 
 import argparse
+import importlib
+import pathlib
+import pkgutil
 import sys
 import time
+from typing import List, Tuple
 
 from benchmarks.common import csv_row, save_results
 
-BENCHES = [
-    ("thm2_cheb_error", "benchmarks.thm2_cheb_error"),
-    ("thm35_error_prop", "benchmarks.thm35_error_prop"),
-    ("table1_accuracy", "benchmarks.table1_accuracy"),
-    ("fig2_clients", "benchmarks.fig2_clients"),
-    ("fig3_comm", "benchmarks.fig3_comm"),
-    ("fig5_degree", "benchmarks.fig5_degree"),
-    ("fig6_vector", "benchmarks.fig6_vector"),
-    ("stability_basis", "benchmarks.stability_basis"),
-    ("kernel_bench", "benchmarks.kernel_bench"),
-]
+# Modules that are infrastructure, not benchmarks.
+_NON_BENCHES = {"common", "run"}
+
+
+def discover_benches(
+    broken: List[Tuple[str, Exception]] | None = None,
+) -> List[Tuple[str, object]]:
+    """The one figure registry: (name, module) for every benchmark module.
+
+    A module that fails to import is ISOLATED, not fatal: it is appended
+    to ``broken`` (when given) and skipped, so one bad figure file cannot
+    take down the runner — or ``--only`` runs of unrelated figures.
+    """
+    pkg_dir = str(pathlib.Path(__file__).parent)
+    found = []
+    for info in sorted(pkgutil.iter_modules([pkg_dir]), key=lambda m: m.name):
+        if info.name in _NON_BENCHES or info.name.startswith("_"):
+            continue
+        try:
+            mod = importlib.import_module(f"benchmarks.{info.name}")
+        except Exception as e:  # pragma: no cover - needs a broken module
+            if broken is not None:
+                broken.append((info.name, e))
+            continue
+        if callable(getattr(mod, "run", None)) and callable(
+            getattr(mod, "derived", None)
+        ):
+            found.append((info.name, mod))
+    return found
 
 
 def main() -> None:
@@ -33,14 +61,23 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    import importlib
+    broken: List[Tuple[str, Exception]] = []
+    benches = discover_benches(broken)
+    known = [name for name, _ in benches] + [name for name, _ in broken]
+    if args.only and args.only not in known:
+        ap.error(f"unknown benchmark {args.only!r}: discovered {known}")
 
     print("name,us_per_call,derived")
     failures = 0
-    for name, modpath in BENCHES:
+    for name, exc in broken:  # pragma: no cover - needs a broken module
         if args.only and args.only != name:
             continue
-        mod = importlib.import_module(modpath)
+        failures += 1
+        print(csv_row(name, 0.0, f"FAILED: import: {type(exc).__name__}: {exc}"),
+              flush=True)
+    for name, mod in benches:
+        if args.only and args.only != name:
+            continue
         t0 = time.perf_counter()
         try:
             rows = mod.run(fast=args.fast)

@@ -89,12 +89,20 @@ def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
     return decorator
 
 
+def is_fallback_active() -> bool:
+    """True when ``import hypothesis`` resolves to this fallback (the real
+    library, when installed, always wins — see conftest.py)."""
+    mod = sys.modules.get("hypothesis")
+    return bool(getattr(mod, "IS_REPRO_FALLBACK", False))
+
+
 def install() -> None:
     """Register the fallback as ``hypothesis`` / ``hypothesis.strategies``."""
     if "hypothesis" in sys.modules:  # real library (or prior install) wins
         return
     mod = types.ModuleType("hypothesis")
     mod.__doc__ = __doc__
+    mod.IS_REPRO_FALLBACK = True
     st = types.ModuleType("hypothesis.strategies")
     for name in ("integers", "floats", "sampled_from", "lists"):
         setattr(st, name, globals()[name])

@@ -14,6 +14,7 @@ from repro.federated.trainer import (
     run_federated,
     train_centralized,
 )
+from repro.privacy import PrivacyConfig
 
 __all__ = [
     "fedavg",
@@ -28,6 +29,7 @@ __all__ = [
     "dirichlet_partition",
     "l_hop_sizes",
     "FederatedConfig",
+    "PrivacyConfig",
     "Trainer",
     "best_metrics",
     "run_federated",

@@ -60,6 +60,12 @@ from repro.federated.trainer import (
 )
 from repro.graphs.graph import Graph
 from repro.optim.adamw import adam_init
+from repro.privacy import (
+    add_client_mask,
+    client_round_key,
+    mask_base_key,
+    noise_base_key,
+)
 
 
 def _client_mesh(num_clients: int) -> Mesh:
@@ -105,17 +111,36 @@ def _run_shard_map(g: Graph, cfg: FederatedConfig, mesh: Mesh | None = None) -> 
     test_mask = jnp.asarray(g.test_mask)
 
     local_update = make_local_update(make_loss_fn(forward, labels), cfg)
+    priv = cfg.privacy
+    noise_base = noise_base_key(cfg.seed)
+    mask_base = mask_base_key(cfg.seed)
 
-    def shard_body(nb_masks_s, tr_masks_s, sel_s, gparams, srv_state):
-        """Runs on one shard = one client. Leading client axis is size 1."""
+    def shard_body(nb_masks_s, tr_masks_s, sel_s, sel_full, gparams, srv_state):
+        """Runs on one shard = one client. Leading client axis is size 1.
+
+        ``sel_full`` is the replicated (rounds, K) CS(t) table: each shard
+        reads its own column for participation and — with secure_agg on —
+        the whole row to decide which pairwise masks are live this round.
+        """
         nb_mask = nb_masks_s[0]
         tr_mask = tr_masks_s[0]
         my_sel = sel_s[:, 0]                  # (rounds,) this client's CS(t)
+        cid = jax.lax.axis_index("clients")
         opt_state = adam_init(gparams)
 
-        def round_fn(carry, w):
+        def round_fn(carry, xs):
+            w, t, sel_row = xs
             gp, opt, srv = carry
-            local_params, new_opt = local_update(gp, opt, nb_mask, tr_mask)
+            noise_key = client_round_key(noise_base, t, cid)
+            local_params, new_opt = local_update(
+                gp, opt, nb_mask, tr_mask, noise_key
+            )
+            if priv.secure_agg:
+                # Ship a masked update: the same deterministic pairwise
+                # masks the vmap backend adds, cancelling in the psum.
+                local_params = add_client_mask(
+                    mask_base, t, cid, sel_row, local_params, priv.mask_scale
+                )
             # An unselected shard keeps its optimizer state (same rule as
             # the vmap backend's scatter of selected states only).
             opt = jax.tree.map(
@@ -152,7 +177,9 @@ def _run_shard_map(g: Graph, cfg: FederatedConfig, mesh: Mesh | None = None) -> 
             return (new_global, opt, srv), (va, ta)
 
         (gp, _, _), (vas, tas) = jax.lax.scan(
-            round_fn, (gparams, opt_state, srv_state), my_sel
+            round_fn,
+            (gparams, opt_state, srv_state),
+            (my_sel, jnp.arange(my_sel.shape[0], dtype=jnp.int32), sel_full),
         )
         return gp, vas, tas
 
@@ -161,11 +188,11 @@ def _run_shard_map(g: Graph, cfg: FederatedConfig, mesh: Mesh | None = None) -> 
         shard_map(
             shard_body,
             mesh=mesh,
-            in_specs=(spec_clients, spec_clients, P(None, "clients"), P(), P()),
+            in_specs=(spec_clients, spec_clients, P(None, "clients"), P(), P(), P()),
             out_specs=(P(), P(), P()),
         )
     )
-    gp, vas, tas = fn(nb_masks, tr_masks, sel, global_params, server_state)
+    gp, vas, tas = fn(nb_masks, tr_masks, sel, sel, global_params, server_state)
     val_curve = [float(x) for x in np.asarray(vas)]
     test_curve = [float(x) for x in np.asarray(tas)]
     return build_result(

@@ -47,6 +47,17 @@ from repro.federated.partition import (
 )
 from repro.graphs.graph import Graph
 from repro.optim.adamw import adam_init, adam_update
+from repro.privacy import (
+    PrivacyConfig,
+    add_client_mask,
+    client_round_key,
+    make_dp_transform,
+    mask_base_key,
+    noise_base_key,
+    noisy_pack,
+    pack_noise_key,
+    privacy_report,
+)
 
 Array = jax.Array
 
@@ -70,11 +81,22 @@ class FederatedConfig:
     seed: int = 0
     model: FedGATConfig = field(default_factory=FedGATConfig)
     gcn_hidden: int = 16
+    privacy: PrivacyConfig = field(default_factory=PrivacyConfig)
 
 
 # ---------------------------------------------------------------------------
 # Shared building blocks (both backends use exactly these)
 # ---------------------------------------------------------------------------
+
+def pack_released(cfg: FederatedConfig) -> bool:
+    """True when this run pre-communicates a pack (the payload pack-DP
+    noises): a fedgat/distgat method whose effective engine needs one."""
+    from repro.core.engine import get_engine
+
+    if cfg.method not in ("fedgat", "distgat"):
+        return False
+    return get_engine(method_model_config(cfg).engine).needs_pack
+
 
 def method_model_config(cfg: FederatedConfig) -> FedGATConfig:
     """The model config a federated method actually trains.
@@ -95,10 +117,18 @@ def build_forward(
 
     For fedgat/distgat this wraps a :class:`FedGAT` facade (coefficients
     computed once; the one-shot pack communicated here, under ``key``).
+    With ``privacy.pack_noise_multiplier > 0`` the stored pack is replaced
+    by its noised release (privacy/pack_dp.py) — the one-shot Gaussian
+    mechanism on the only raw-feature-derived payload that leaves a client.
     """
     if cfg.method in ("fedgat", "distgat"):
         model = FedGAT(method_model_config(cfg))
         model.precommunicate(key, g)
+        if cfg.privacy.pack_noise_multiplier > 0 and model.pack is not None:
+            model.pack = noisy_pack(
+                pack_noise_key(cfg.seed), model.pack,
+                jnp.asarray(g.features), cfg.privacy.pack_noise_multiplier,
+            )
 
         def init_fn(k):
             return model.init(k, g)
@@ -146,9 +176,20 @@ def make_loss_fn(forward: Callable, labels: Array) -> Callable:
 def make_local_update(loss_fn: Callable, cfg: FederatedConfig) -> Callable:
     """One client's local phase: ``cfg.local_steps`` Adam steps from the
     global params (with optional FedProx pull). Shared verbatim by the vmap
-    and shard_map backends so their trajectories match."""
+    and shard_map backends so their trajectories match.
 
-    def local_update(gparams, opt_state, nb_mask, tr_mask):
+    When ``cfg.privacy`` enables DP, the client's update delta is clipped
+    and noised (privacy/dp.py) before it leaves the local phase — both
+    backends pass the same per-(round, client) ``noise_key``, so the
+    privatised trajectories match too. With DP off, ``noise_key`` is dead
+    and the computation is bit-identical to the privacy-free trainer.
+    """
+    priv = cfg.privacy
+    dp = (
+        make_dp_transform(priv, num_selected(cfg)) if priv.dp_enabled else None
+    )
+
+    def local_update(gparams, opt_state, nb_mask, tr_mask, noise_key):
         def one(carry, _):
             params, opt = carry
             grads = jax.grad(loss_fn)(params, nb_mask, tr_mask)
@@ -162,9 +203,16 @@ def make_local_update(loss_fn: Callable, cfg: FederatedConfig) -> Callable:
         (params, opt_state), _ = jax.lax.scan(
             one, (gparams, opt_state), None, length=cfg.local_steps
         )
+        if dp is not None:
+            params = dp(noise_key, gparams, params)
         return params, opt_state
 
     return local_update
+
+
+def num_selected(cfg: FederatedConfig) -> int:
+    """Participants per round under Algorithm 2's CS(t) (>= 1)."""
+    return max(1, int(round(cfg.client_fraction * cfg.num_clients)))
 
 
 def selection_schedule(cfg: FederatedConfig) -> Tuple[np.ndarray, np.ndarray]:
@@ -180,7 +228,7 @@ def selection_schedule(cfg: FederatedConfig) -> Tuple[np.ndarray, np.ndarray]:
     participation cannot make their trajectories diverge.
     """
     K = cfg.num_clients
-    n_sel = max(1, int(round(cfg.client_fraction * K)))
+    n_sel = num_selected(cfg)
     if n_sel >= K:
         sel = np.ones((cfg.rounds, K), np.float32)
         chosen = np.broadcast_to(np.arange(K, dtype=np.int32), (cfg.rounds, K))
@@ -238,6 +286,10 @@ def build_result(
 ) -> Dict[str, Any]:
     """The one result schema both backends return."""
     best_val, best_test = best_metrics(val_curve, test_curve)
+    privacy = privacy_report(
+        cfg.privacy, rounds=cfg.rounds, num_clients=cfg.num_clients,
+        num_selected=num_selected(cfg), pack_released=pack_released(cfg),
+    )
     return {
         "params": params,
         "val_curve": val_curve,
@@ -250,6 +302,8 @@ def build_result(
         "seconds": seconds,
         "backend": cfg.backend,
         "mesh": mesh_description(mesh),
+        "epsilon": privacy["epsilon"],
+        "privacy": privacy,
     }
 
 
@@ -264,6 +318,14 @@ class Trainer:
         if cfg.backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {cfg.backend!r}: supported backends are {list(BACKENDS)}"
+            )
+        cfg.privacy.validate()
+        if cfg.privacy.pack_noise_multiplier > 0 and not pack_released(cfg):
+            raise ValueError(
+                f"pack_noise_multiplier > 0 but method {cfg.method!r} with "
+                f"engine {method_model_config(cfg).engine!r} never releases "
+                "a pack — there is nothing to noise (use a pack-based "
+                "engine like 'matrix'/'vector', or drop the knob)"
             )
         self.cfg = cfg
 
@@ -296,10 +358,15 @@ class Trainer:
         test_mask = jnp.asarray(g.test_mask)
 
         local_update = make_local_update(make_loss_fn(forward, labels), cfg)
+        priv = cfg.privacy
+        noise_base = noise_base_key(cfg.seed)
+        mask_base = mask_base_key(cfg.seed)
 
         @jax.jit
-        def round_step(gparams, opt_states, server_state, chosen):
-            """chosen: (n_sel,) int — the clients CS(t) picked this round.
+        def round_step(gparams, opt_states, server_state, chosen, sel_row, t):
+            """chosen: (n_sel,) int — the clients CS(t) picked this round;
+            sel_row: (K,) its 0/1 weight layout; t: round index (traced so
+            every round shares one trace).
 
             Only the selected clients are gathered and updated — unselected
             clients run no compute at all and keep their optimizer state
@@ -309,13 +376,23 @@ class Trainer:
             sel_opt = jax.tree.map(
                 lambda x: jnp.take(x, chosen, axis=0), opt_states
             )
+            noise_keys = jax.vmap(lambda c: client_round_key(noise_base, t, c))(chosen)
             stacked_params, sel_opt = jax.vmap(
-                local_update, in_axes=(None, 0, 0, 0)
+                local_update, in_axes=(None, 0, 0, 0, 0)
             )(
                 gparams, sel_opt,
                 jnp.take(nb_masks, chosen, axis=0),
                 jnp.take(tr_masks, chosen, axis=0),
+                noise_keys,
             )
+            if priv.secure_agg:
+                # Each selected client ships a masked update; the pairwise
+                # masks cancel in the fedavg mean below (secure_agg.py).
+                stacked_params = jax.vmap(
+                    lambda p, c: add_client_mask(
+                        mask_base, t, c, sel_row, p, priv.mask_scale
+                    )
+                )(stacked_params, chosen)
             opt_states = jax.tree.map(
                 lambda full, new: full.at[chosen].set(new), opt_states, sel_opt
             )
@@ -340,11 +417,13 @@ class Trainer:
 
         val_curve, test_curve = [], []
         t0 = time.time()
-        _, chosen_sched = selection_schedule(cfg)
+        sel_sched, chosen_sched = selection_schedule(cfg)
         for t in range(cfg.rounds):
             global_params, opt_states, server_state = round_step(
                 global_params, opt_states, server_state,
                 jnp.asarray(chosen_sched[t]),
+                jnp.asarray(sel_sched[t]),
+                jnp.asarray(t, jnp.int32),
             )
             va, ta = evaluate(global_params)
             val_curve.append(float(va))

@@ -1,0 +1,145 @@
+"""repro.privacy — differential privacy + secure aggregation for the Trainer.
+
+Four mechanisms, all configured through :class:`PrivacyConfig` (the
+``privacy`` field of ``FederatedConfig``) and wired identically through the
+vmap and shard_map Trainer backends:
+
+  * privacy/dp.py         — DP-FedAvg client-update clipping + Gaussian
+                            noise, a pure pytree transform inside
+                            ``make_local_update``;
+  * privacy/accountant.py — RDP/moments accountant composing the per-round
+                            sampled Gaussian mechanism (CS(t) subsampling
+                            amplification) into an (ε, δ) figure;
+  * privacy/secure_agg.py — simulated pairwise-mask secure aggregation
+                            whose masks cancel in the FedAvg sum;
+  * privacy/pack_dp.py    — calibrated one-shot noise on the
+                            pre-communicated FedGAT pack.
+
+:func:`privacy_report` is the result-schema hook: it turns a run's config
+into the ``privacy`` dict (and ``epsilon`` column) of ``build_result``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+from repro.privacy.accountant import (
+    DEFAULT_ORDERS,
+    RdpAccountant,
+    compute_epsilon,
+    rdp_sampled_gaussian,
+    rdp_to_epsilon,
+)
+from repro.privacy.config import PrivacyConfig
+from repro.privacy.dp import (
+    client_round_key,
+    make_dp_transform,
+    mask_base_key,
+    noise_base_key,
+    pack_noise_key,
+    per_client_noise_std,
+    tree_add_normal,
+)
+from repro.privacy.pack_dp import (
+    feature_norm_bound,
+    noisy_pack,
+    pack_release_steps,
+    pack_sensitivities,
+    projector_norm,
+)
+from repro.privacy.secure_agg import add_client_mask, client_mask, pair_key
+
+__all__ = [
+    "PrivacyConfig",
+    "RdpAccountant",
+    "DEFAULT_ORDERS",
+    "compute_epsilon",
+    "rdp_sampled_gaussian",
+    "rdp_to_epsilon",
+    "client_round_key",
+    "make_dp_transform",
+    "mask_base_key",
+    "noise_base_key",
+    "pack_noise_key",
+    "per_client_noise_std",
+    "tree_add_normal",
+    "noisy_pack",
+    "pack_release_steps",
+    "pack_sensitivities",
+    "feature_norm_bound",
+    "projector_norm",
+    "add_client_mask",
+    "client_mask",
+    "pair_key",
+    "privacy_report",
+]
+
+
+def privacy_report(
+    priv: PrivacyConfig,
+    *,
+    rounds: int,
+    num_clients: int,
+    num_selected: int,
+    pack_released: bool = True,
+) -> Dict[str, Any]:
+    """The serializable privacy summary stored in every Trainer result.
+
+    ``epsilon`` is the client-level (ε, δ=priv.delta) of the whole training
+    run *at the aggregate* — the mechanism whose noise std is σ·clip on the
+    sum of clipped deltas: None when the DP mechanism is off entirely, ∞
+    when updates are clipped but unnoised, finite when the sampled
+    Gaussian mechanism ran. Each client only adds its 1/sqrt(n_sel) noise
+    share locally (privacy/dp.py), so that figure holds against every
+    party only under ``secure_agg=True`` (the server never sees an
+    individual update); with secure aggregation off it is the
+    trusted-aggregator guarantee of the released aggregate, and
+    ``epsilon_vs_server`` reports the weaker guarantee an honest-but-
+    curious server observing individual updates (effective multiplier
+    σ/sqrt(n_sel)) actually gets. ``trust_model`` names which regime
+    applies. ``pack_epsilon`` accounts the one-shot pack release
+    separately, and only when a pack was actually released
+    (``pack_released`` — the Trainer passes this; packless methods/engines
+    are rejected at config time).
+    """
+    priv.validate()
+    q = num_selected / max(num_clients, 1)
+    if not priv.dp_enabled:
+        epsilon = epsilon_vs_server = None
+    elif priv.noise_multiplier <= 0:
+        epsilon = epsilon_vs_server = math.inf
+    else:
+        epsilon = compute_epsilon(priv.noise_multiplier, rounds, q, priv.delta)
+        epsilon_vs_server = (
+            epsilon
+            if priv.secure_agg
+            else compute_epsilon(
+                priv.noise_multiplier / math.sqrt(max(num_selected, 1)),
+                rounds, q, priv.delta,
+            )
+        )
+    # The pack release is a JOINT mechanism: one neighbour's data shifts
+    # every noised tensor, so the accountant composes one Gaussian step
+    # per tensor (4 for both pack types), not a single step.
+    pack_epsilon = (
+        compute_epsilon(
+            priv.pack_noise_multiplier, pack_release_steps(), 1.0, priv.delta
+        )
+        if priv.pack_noise_multiplier > 0 and pack_released
+        else None
+    )
+    return {
+        "enabled": priv.enabled,
+        "mechanism": "dp-fedavg/sgm-rdp",
+        "noise_multiplier": priv.noise_multiplier,
+        "clip": priv.clip,
+        "secure_agg": priv.secure_agg,
+        "trust_model": "secure-agg" if priv.secure_agg else "trusted-aggregator",
+        "pack_noise_multiplier": priv.pack_noise_multiplier,
+        "delta": priv.delta,
+        "sampling_rate": q,
+        "rounds": rounds,
+        "epsilon": epsilon,
+        "epsilon_vs_server": epsilon_vs_server,
+        "pack_epsilon": pack_epsilon,
+    }

@@ -1,0 +1,85 @@
+"""Privacy configuration for the federated Trainer.
+
+One frozen dataclass carries every knob of the ``repro.privacy`` subsystem;
+it hangs off :class:`~repro.federated.trainer.FederatedConfig` as the
+``privacy`` field and threads through both Trainer backends unchanged.
+
+The default configuration is the *identity*: ``noise_multiplier=0``,
+``clip=inf``, ``secure_agg=False``, ``pack_noise_multiplier=0`` add no
+operations to the training computation, so a Trainer run with the default
+``PrivacyConfig`` is bit-identical to one that predates the subsystem.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class PrivacyConfig:
+    """Knobs for DP client updates, secure aggregation and pack noise.
+
+    noise_multiplier      σ of the per-round Gaussian mechanism on client
+                          update deltas (DP-FedAvg). The *sum* of the
+                          participating clients' clipped deltas receives
+                          noise of std ``σ · clip``; each client adds its
+                          1/sqrt(n_sel) share locally so no trusted
+                          aggregator is required. 0 disables noise.
+    clip                  L2 clipping norm C for each client's update delta
+                          (``W_local - W_global``). ``inf`` disables
+                          clipping; finite clip is required whenever
+                          ``noise_multiplier > 0`` (noise is calibrated to
+                          the clip norm).
+    secure_agg            simulate pairwise-mask secure aggregation: every
+                          participating client adds antisymmetric masks that
+                          provably cancel in the FedAvg/weighted-psum sum,
+                          so the server only ever sees masked updates.
+    mask_scale            std of each pairwise mask (cosmetic — masks cancel
+                          exactly in real arithmetic; the scale only bounds
+                          the float cancellation error).
+    pack_noise_multiplier σ of the one-shot Gaussian mechanism on the
+                          pre-communicated FedGAT pack (K1/K2/M tensors),
+                          calibrated per-tensor to its neighbour-level
+                          sensitivity (see privacy/pack_dp.py). 0 disables.
+    delta                 δ at which the accountant reports ε.
+    """
+
+    noise_multiplier: float = 0.0
+    clip: float = math.inf
+    secure_agg: bool = False
+    mask_scale: float = 1.0
+    pack_noise_multiplier: float = 0.0
+    delta: float = 1e-5
+
+    @property
+    def dp_enabled(self) -> bool:
+        """The update-DP transform (clip and/or noise) is active."""
+        return self.noise_multiplier > 0.0 or math.isfinite(self.clip)
+
+    @property
+    def enabled(self) -> bool:
+        """Any privacy mechanism is active (False == identity config)."""
+        return (
+            self.dp_enabled
+            or self.secure_agg
+            or self.pack_noise_multiplier > 0.0
+        )
+
+    def validate(self) -> None:
+        if self.noise_multiplier < 0:
+            raise ValueError(f"noise_multiplier must be >= 0, got {self.noise_multiplier}")
+        if self.pack_noise_multiplier < 0:
+            raise ValueError(
+                f"pack_noise_multiplier must be >= 0, got {self.pack_noise_multiplier}"
+            )
+        if self.clip <= 0:
+            raise ValueError(f"clip must be > 0 (use inf to disable), got {self.clip}")
+        if self.mask_scale <= 0:
+            raise ValueError(f"mask_scale must be > 0, got {self.mask_scale}")
+        if not (0.0 < self.delta < 1.0):
+            raise ValueError(f"delta must be in (0, 1), got {self.delta}")
+        if self.noise_multiplier > 0 and not math.isfinite(self.clip):
+            raise ValueError(
+                "noise_multiplier > 0 requires a finite clip norm: Gaussian "
+                "noise is calibrated to the clip (sensitivity) bound"
+            )

@@ -1,0 +1,94 @@
+"""Calibrated Gaussian noise on the pre-communicated FedGAT pack.
+
+The pack (Matrix: P/M2/K1/K2, Vector: M1/M2/K1/K3) is released ONCE before
+training — the paper's single communication round. Its tensors are sums of
+per-neighbour terms, so the natural neighbour-level sensitivity of each
+tensor is the largest single-neighbour contribution; with the feature
+row-norm bound ``Hmax = max_j ||h_j||_2`` and the projector norm
+``s_U(r) = ||U_j||_F = 1/2·sqrt(2 + r² + r⁻²)``:
+
+  Matrix pack   P : s_U(r)        M2 : Hmax · s_U(r)
+                K1: sqrt(2)       K2 : sqrt(2) · Hmax
+  Vector pack   M1, M2, K1 : Hmax          K3 : 1
+
+Noise of std ``σ · sensitivity`` per tensor is the classic Gaussian
+mechanism on the one-shot release, accounted as a single step (q = 1) by
+privacy/accountant.py. Caveats: this is NEIGHBOUR-level (edge-level)
+privacy of the pack payload only — it composes with, but is accounted
+separately from, the per-round update mechanism — and Vector FedGAT's
+``mask4`` slot-indicator is left unnoised (it encodes node degrees, which
+the comm protocol already reveals; noising it destroys the disjoint-support
+algebra entirely).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Pack fields that must stay exact: non-tensor metadata and the Vector
+# pack's structural slot indicator.
+_SKIP_FIELDS = ("r", "mask4")
+
+# Both pack types release exactly this many independently-noised tensors,
+# and ONE neighbour change shifts all of them at once — the joint release
+# therefore composes this many Gaussian steps in the accountant (see
+# ``pack_release_steps``; pack_sensitivities returns dicts of this size).
+NUM_NOISED_TENSORS = 4
+
+
+def pack_release_steps() -> int:
+    """Accountant steps of one pack release: one Gaussian mechanism per
+    noised tensor, composed (a neighbour's data touches every tensor)."""
+    return NUM_NOISED_TENSORS
+
+
+def feature_norm_bound(h: Array) -> float:
+    """Hmax = max_j ||h_j||_2 over node feature rows."""
+    return float(jnp.max(jnp.linalg.norm(jnp.asarray(h), axis=1)))
+
+
+def projector_norm(r: float) -> float:
+    """Frobenius norm of one obfuscated projector U_j (orthonormal pair)."""
+    return 0.5 * math.sqrt(2.0 + r * r + 1.0 / (r * r))
+
+
+def pack_sensitivities(pack: Any, h: Array) -> Dict[str, float]:
+    """Per-tensor neighbour-level sensitivity, keyed by pack field name."""
+    hmax = feature_norm_bound(h)
+    fields = set(pack._fields)
+    if {"P", "M2", "K1", "K2"} <= fields:          # Matrix FedGAT pack
+        s_u = projector_norm(float(pack.r))
+        return {
+            "P": s_u,
+            "M2": hmax * s_u,
+            "K1": math.sqrt(2.0),
+            "K2": math.sqrt(2.0) * hmax,
+        }
+    if {"M1", "M2", "K1", "K3"} <= fields:         # Vector FedGAT pack
+        return {"M1": hmax, "M2": hmax, "K1": hmax, "K3": 1.0}
+    raise ValueError(
+        f"unknown pack type {type(pack).__name__!r} with fields {sorted(fields)}"
+    )
+
+
+def noisy_pack(key: Array, pack: Any, h: Array, noise_multiplier: float) -> Any:
+    """pack + N(0, (σ·sensitivity)² I) per tensor; same NamedTuple type out."""
+    if noise_multiplier < 0:
+        raise ValueError(f"noise_multiplier must be >= 0, got {noise_multiplier}")
+    if pack is None or noise_multiplier == 0:
+        return pack
+    sens = pack_sensitivities(pack, h)
+    updates = {}
+    for i, name in enumerate(pack._fields):
+        if name in _SKIP_FIELDS or name not in sens:
+            continue
+        leaf = getattr(pack, name)
+        std = jnp.asarray(noise_multiplier * sens[name], leaf.dtype)
+        noise = jax.random.normal(jax.random.fold_in(key, i), leaf.shape, leaf.dtype)
+        updates[name] = leaf + std * noise
+    return pack._replace(**updates)

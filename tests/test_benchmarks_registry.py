@@ -1,0 +1,73 @@
+"""Benchmark discovery: one registry, no copy-pasted figure lists.
+
+``benchmarks.run.discover_benches`` must find exactly the modules that
+expose the ``run``/``derived`` benchmark contract — including the privacy
+subsystem's ``privacy_tradeoff`` — so a new figure file is registered by
+existing and a stale list can never silently drop one.
+"""
+import importlib
+import pathlib
+
+from benchmarks.run import _NON_BENCHES, discover_benches
+
+BENCH_DIR = pathlib.Path(__file__).resolve().parents[1] / "benchmarks"
+
+
+def test_discovery_matches_filesystem():
+    discovered = {name for name, _ in discover_benches()}
+    expected = set()
+    for path in BENCH_DIR.glob("*.py"):
+        stem = path.stem
+        if stem in _NON_BENCHES or stem.startswith("_"):
+            continue
+        mod = importlib.import_module(f"benchmarks.{stem}")
+        if callable(getattr(mod, "run", None)) and callable(
+            getattr(mod, "derived", None)
+        ):
+            expected.add(stem)
+    assert discovered == expected
+    assert len(discovered) >= 10
+
+
+def test_privacy_tradeoff_is_registered():
+    names = [name for name, _ in discover_benches()]
+    assert "privacy_tradeoff" in names
+    # the historical figures are all still discoverable
+    for required in (
+        "thm2_cheb_error", "thm35_error_prop", "table1_accuracy",
+        "fig2_clients", "fig3_comm", "fig5_degree", "fig6_vector",
+        "stability_basis", "kernel_bench",
+    ):
+        assert required in names, required
+
+
+def test_discovered_modules_are_importable_and_ordered():
+    benches = discover_benches()
+    names = [name for name, _ in benches]
+    assert names == sorted(names)
+    for name, mod in benches:
+        assert mod.__name__ == f"benchmarks.{name}"
+
+
+def test_broken_module_is_isolated_not_fatal(monkeypatch):
+    """One unimportable figure file must not take down discovery (and with
+    it every run.py invocation, including --only of unrelated figures)."""
+    import benchmarks.run as runmod
+
+    real_import = importlib.import_module
+
+    def exploding_import(name, *args, **kwargs):
+        if name == "benchmarks.fig2_clients":
+            raise RuntimeError("synthetically broken figure module")
+        return real_import(name, *args, **kwargs)
+
+    monkeypatch.setattr(runmod.importlib, "import_module", exploding_import)
+    broken = []
+    found = runmod.discover_benches(broken)
+    names = [name for name, _ in found]
+    assert "fig2_clients" not in names
+    assert "privacy_tradeoff" in names and "table1_accuracy" in names
+    assert [name for name, _ in broken] == ["fig2_clients"]
+    assert isinstance(broken[0][1], RuntimeError)
+    # without a collector the broken module is silently skipped
+    assert "fig2_clients" not in [n for n, _ in runmod.discover_benches()]

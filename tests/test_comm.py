@@ -1,0 +1,95 @@
+"""federated/comm.py accounting invariants on a hand-built 2-client graph.
+
+The graph is small enough to verify every quantity by hand:
+
+    nodes   0 1 2 | 3 4 5        (client 0 owns 0-2, client 1 owns 3-5)
+    edges   0-1, 1-2, 3-4, 4-5   (intra-client)
+            2-3, 1-4             (cross-client)
+"""
+import numpy as np
+import pytest
+
+from repro.federated.comm import (
+    CommReport,
+    _halo_indicator,
+    _pack_cost_per_node,
+    matrix_comm_cost,
+    vector_comm_cost,
+)
+from repro.federated.partition import Partition, cross_client_edge_count, dirichlet_partition
+from repro.graphs import make_cora_like
+from repro.graphs.graph import make_graph
+
+
+@pytest.fixture(scope="module")
+def two_client():
+    n = 6
+    adj = np.zeros((n, n), bool)
+    for i, j in [(0, 1), (1, 2), (3, 4), (4, 5), (2, 3), (1, 4)]:
+        adj[i, j] = adj[j, i] = True
+    rng = np.random.default_rng(0)
+    g = make_graph(
+        features=rng.normal(size=(n, 5)).astype(np.float32),
+        labels=np.array([0, 0, 0, 1, 1, 1]),
+        adj=adj,
+        train_mask=np.array([1, 0, 0, 1, 0, 0], bool),
+        val_mask=np.array([0, 1, 0, 0, 1, 0], bool),
+        test_mask=np.array([0, 0, 1, 0, 0, 1], bool),
+        num_classes=2,
+    )
+    part = Partition(owner=np.array([0, 0, 0, 1, 1, 1], np.int32),
+                     num_clients=2, beta=0.0)
+    return g, part
+
+
+def test_cross_client_edges_counted_exactly(two_client):
+    g, part = two_client
+    assert cross_client_edge_count(g.adj, part) == 2          # 2-3 and 1-4
+
+
+def test_halo_indicator_hand_checked(two_client):
+    g, part = two_client
+    # hops=0: exactly the local node sets
+    need0 = _halo_indicator(g, part, hops=0)
+    np.testing.assert_array_equal(need0[0], [1, 1, 1, 0, 0, 0])
+    np.testing.assert_array_equal(need0[1], [0, 0, 0, 1, 1, 1])
+    # hops=1: local set + its direct neighbours across the cut.
+    # client 0 reaches 3 (via 2-3) and 4 (via 1-4); never 5.
+    need1 = _halo_indicator(g, part, hops=1)
+    np.testing.assert_array_equal(need1[0], [1, 1, 1, 1, 1, 0])
+    # client 1 reaches 2 (via 3-2) and 1 (via 4-1); never 0.
+    np.testing.assert_array_equal(need1[1], [0, 1, 1, 1, 1, 1])
+    # hops=2: the whole graph is within 2 hops of either side
+    need2 = _halo_indicator(g, part, hops=2)
+    assert need2.all()
+
+
+def test_per_client_sums_to_download_scalars(two_client):
+    g, part = two_client
+    for cost_fn in (matrix_comm_cost, vector_comm_cost):
+        for L in (1, 2, 3):
+            rep = cost_fn(g, part, num_layers=L)
+            assert isinstance(rep, CommReport)
+            assert rep.per_client.shape == (2,)
+            assert int(rep.per_client.sum()) == rep.download_scalars
+            assert rep.upload_scalars == g.num_nodes * g.feature_dim
+
+
+def test_per_client_matches_hand_computed_halo(two_client):
+    """download per client == Σ_{nodes in the (L-1)-hop halo} pack cost."""
+    g, part = two_client
+    per_node = _pack_cost_per_node(g, "matrix")
+    rep = matrix_comm_cost(g, part, num_layers=2)             # hops = 1
+    expect0 = int(per_node[[0, 1, 2, 3, 4]].sum())
+    expect1 = int(per_node[[1, 2, 3, 4, 5]].sum())
+    assert rep.per_client.tolist() == [expect0, expect1]
+
+
+def test_per_client_sum_invariant_on_generated_graph():
+    """The invariant holds on a generated graph + Dirichlet partition too."""
+    g = make_cora_like("tiny", seed=0)
+    part = dirichlet_partition(g.labels, 4, 1.0, 0)
+    for cost_fn in (matrix_comm_cost, vector_comm_cost):
+        rep = cost_fn(g, part)
+        assert int(rep.per_client.sum()) == rep.download_scalars
+        assert (rep.per_client >= 0).all()

@@ -1,0 +1,57 @@
+"""Compat layer: the real ``hypothesis`` must win whenever it is installed;
+the deterministic fallback activates ONLY on ImportError (ROADMAP item)."""
+import importlib.metadata
+import importlib.util
+import sys
+
+from repro._compat.hypothesis_fallback import is_fallback_active
+
+
+def _real_hypothesis_installed() -> bool:
+    """Installed-as-a-distribution check that does not import the module
+    (importing would be confounded by the fallback's sys.modules entry)."""
+    try:
+        importlib.metadata.version("hypothesis")
+        return True
+    except importlib.metadata.PackageNotFoundError:
+        return False
+
+
+def test_active_hypothesis_matches_environment():
+    """Exactly one implementation is active, and it is the right one:
+    the real library when the container has it, the fallback otherwise."""
+    import hypothesis  # conftest guarantees some implementation resolves
+
+    fallback = is_fallback_active()
+    assert fallback == getattr(hypothesis, "IS_REPRO_FALLBACK", False)
+    if _real_hypothesis_installed():
+        assert not fallback, (
+            "real hypothesis is installed but the fallback shadowed it — "
+            "conftest must only install the fallback on ImportError"
+        )
+        assert hasattr(hypothesis, "__version__")
+    else:
+        assert fallback, (
+            "hypothesis is not installed yet the fallback is inactive — "
+            "collection should have died without it"
+        )
+
+
+def test_active_implementation_provides_used_surface():
+    """Whichever implementation won must expose the API the tests use."""
+    import hypothesis
+    from hypothesis import strategies as st
+
+    for name in ("given", "settings"):
+        assert callable(getattr(hypothesis, name))
+    for name in ("integers", "floats", "sampled_from", "lists"):
+        assert callable(getattr(st, name))
+
+
+def test_fallback_not_double_installed():
+    """install() is idempotent and never evicts an existing module."""
+    from repro._compat import hypothesis_fallback
+
+    before = sys.modules["hypothesis"]
+    hypothesis_fallback.install()
+    assert sys.modules["hypothesis"] is before

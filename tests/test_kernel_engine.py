@@ -231,6 +231,13 @@ def test_select_block_sizes_env_override(monkeypatch):
     assert (bn, bd) != (16, 8)  # override not baked into the memo
 
 
+def test_select_block_sizes_degenerate_degree_falls_back():
+    # B so large even the smallest (8, 8) tile blows the VMEM budget:
+    # the selector must fall back to that tile, not die in an assert.
+    clear_block_cache()
+    assert select_block_sizes(64, 20_000, 32, interpret=True) == (8, 8)
+
+
 @pytest.mark.parametrize("bad", ["0", "-8", "128k"])
 def test_select_block_sizes_env_validation(monkeypatch, bad):
     clear_block_cache()

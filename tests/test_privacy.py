@@ -1,0 +1,485 @@
+"""repro.privacy: DP transform, accountant, secure aggregation, pack noise,
+and their integration through BOTH Trainer backends.
+
+The invariants mirror the subsystem's contract:
+  * identity config  -> bit-identical Trainer results;
+  * secure_agg masks -> aggregates match unmasked aggregates to <= 1e-5
+    on both backends, including client_fraction < 1 dropout;
+  * accountant ε     -> monotone in rounds, decreasing in noise_multiplier,
+    amplified by subsampling, and present in the result schema.
+"""
+import math
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FedGATConfig
+from repro.federated import FederatedConfig, PrivacyConfig, run_federated
+from repro.federated.aggregation import fedavg
+from repro.federated.trainer import Trainer, num_selected
+from repro.privacy import (
+    RdpAccountant,
+    client_mask,
+    compute_epsilon,
+    make_dp_transform,
+    noisy_pack,
+    pack_sensitivities,
+    privacy_report,
+    rdp_sampled_gaussian,
+    tree_add_normal,
+)
+from repro.privacy.dp import mask_base_key, noise_base_key, pack_noise_key
+from repro.graphs import make_cora_like
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return make_cora_like("tiny", seed=0)
+
+
+def _param_diff(a, b):
+    return max(
+        float(jnp.abs(x - y).max())
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+# ---------------------------------------------------------------------------
+# PrivacyConfig
+# ---------------------------------------------------------------------------
+
+def test_default_config_is_identity():
+    priv = PrivacyConfig()
+    assert not priv.enabled and not priv.dp_enabled
+    priv.validate()
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="finite clip"):
+        PrivacyConfig(noise_multiplier=1.0).validate()  # clip defaults to inf
+    with pytest.raises(ValueError):
+        PrivacyConfig(noise_multiplier=-1.0).validate()
+    with pytest.raises(ValueError):
+        PrivacyConfig(clip=0.0).validate()
+    with pytest.raises(ValueError):
+        PrivacyConfig(delta=0.0).validate()
+    with pytest.raises(ValueError, match="finite clip"):
+        Trainer(FederatedConfig(privacy=PrivacyConfig(noise_multiplier=1.0)))
+    PrivacyConfig(noise_multiplier=1.0, clip=0.5).validate()
+    assert PrivacyConfig(clip=0.5).dp_enabled            # clip-only counts
+    assert PrivacyConfig(secure_agg=True).enabled
+    assert PrivacyConfig(pack_noise_multiplier=0.1).enabled
+
+
+# ---------------------------------------------------------------------------
+# Accountant (RDP / moments)
+# ---------------------------------------------------------------------------
+
+def test_epsilon_monotone_in_rounds():
+    es = [compute_epsilon(1.0, t, 0.5, 1e-5) for t in (1, 5, 20, 60, 200)]
+    assert all(a < b for a, b in zip(es, es[1:]))
+
+
+def test_epsilon_decreasing_in_noise_multiplier():
+    es = [compute_epsilon(s, 60, 0.5, 1e-5) for s in (0.5, 1.0, 2.0, 4.0, 8.0)]
+    assert all(a > b for a, b in zip(es, es[1:]))
+
+
+def test_subsampling_amplification():
+    full = compute_epsilon(1.0, 60, 1.0, 1e-5)
+    amp = compute_epsilon(1.0, 60, 0.25, 1e-5)
+    assert amp < full
+
+
+def test_epsilon_edge_cases():
+    assert compute_epsilon(1.0, 0, 0.5, 1e-5) == 0.0          # no rounds
+    assert math.isinf(compute_epsilon(0.0, 10, 0.5, 1e-5))    # no noise
+    assert compute_epsilon(1.0, 10, 0.0, 1e-5) == 0.0         # no sampling
+    # plain Gaussian sanity: sigma=1, delta=1e-5 lands in the known range
+    e = compute_epsilon(1.0, 1, 1.0, 1e-5)
+    assert 3.0 < e < 6.0
+
+
+def test_rdp_gaussian_q1_closed_form():
+    for alpha in (2, 8, 32):
+        assert rdp_sampled_gaussian(1.0, 2.0, alpha) == pytest.approx(
+            alpha / (2 * 4.0)
+        )
+
+
+def test_accountant_composes_incrementally():
+    acct = RdpAccountant()
+    for _ in range(10):
+        acct.step(1.5, 0.4)
+    assert acct.get_epsilon(1e-5) == pytest.approx(
+        compute_epsilon(1.5, 10, 0.4, 1e-5)
+    )
+    assert RdpAccountant().get_epsilon(1e-5) == 0.0
+
+
+def test_privacy_report_fields():
+    rep = privacy_report(
+        PrivacyConfig(noise_multiplier=1.0, clip=0.5),
+        rounds=20, num_clients=10, num_selected=5,
+    )
+    assert rep["sampling_rate"] == 0.5 and rep["rounds"] == 20
+    assert np.isfinite(rep["epsilon"]) and rep["enabled"]
+    assert privacy_report(
+        PrivacyConfig(), rounds=20, num_clients=10, num_selected=10
+    )["epsilon"] is None
+    assert math.isinf(
+        privacy_report(
+            PrivacyConfig(clip=0.5), rounds=20, num_clients=10, num_selected=10
+        )["epsilon"]
+    )
+
+
+def test_privacy_report_trust_model():
+    """The headline ε is aggregate-level; without secure aggregation the
+    server sees individual updates at σ/sqrt(n_sel), so the vs-server
+    figure must be strictly weaker (larger) — and collapse to the
+    aggregate figure once secure_agg hides the individual updates."""
+    kw = dict(rounds=20, num_clients=10, num_selected=5)
+    open_rep = privacy_report(
+        PrivacyConfig(noise_multiplier=2.0, clip=0.5), **kw
+    )
+    sealed = privacy_report(
+        PrivacyConfig(noise_multiplier=2.0, clip=0.5, secure_agg=True), **kw
+    )
+    assert open_rep["trust_model"] == "trusted-aggregator"
+    assert sealed["trust_model"] == "secure-agg"
+    assert open_rep["epsilon_vs_server"] > open_rep["epsilon"]
+    assert sealed["epsilon_vs_server"] == sealed["epsilon"]
+    # the vs-server figure is the accountant at the per-update multiplier
+    assert open_rep["epsilon_vs_server"] == pytest.approx(
+        compute_epsilon(2.0 / math.sqrt(5), 20, 0.5, 1e-5)
+    )
+    # n_sel=1: one client's update IS the aggregate, figures coincide
+    solo = privacy_report(
+        PrivacyConfig(noise_multiplier=2.0, clip=0.5),
+        rounds=20, num_clients=10, num_selected=1,
+    )
+    assert solo["epsilon_vs_server"] == pytest.approx(solo["epsilon"])
+
+
+def test_pack_noise_rejected_without_a_pack(graph):
+    """Requesting pack noise on a packless method/engine is a config
+    error — silently training without the claimed mechanism would let the
+    result schema overstate the guarantee."""
+    from repro.federated.trainer import pack_released
+
+    priv = PrivacyConfig(pack_noise_multiplier=0.1)
+    for kw in (
+        {"method": "fedgcn"},
+        {"method": "distgat"},                                   # -> exact
+        {"method": "fedgat", "model": FedGATConfig(engine="direct")},
+    ):
+        cfg = FederatedConfig(**kw, privacy=priv)
+        assert not pack_released(cfg)
+        with pytest.raises(ValueError, match="never releases a pack"):
+            Trainer(cfg)
+    ok = FederatedConfig(
+        method="fedgat", model=FedGATConfig(engine="vector"), privacy=priv
+    )
+    assert pack_released(ok)
+    Trainer(ok)
+    # ... and a report for a packless run never claims a pack epsilon
+    rep = privacy_report(
+        priv, rounds=5, num_clients=4, num_selected=4, pack_released=False
+    )
+    assert rep["pack_epsilon"] is None
+
+
+# ---------------------------------------------------------------------------
+# DP transform (pure pytree mechanics)
+# ---------------------------------------------------------------------------
+
+def test_dp_clip_bounds_delta_norm():
+    t = make_dp_transform(PrivacyConfig(clip=0.25), num_selected=4)
+    g = {"w": jnp.zeros((16,)), "b": jnp.zeros((4,))}
+    big = {"w": jnp.full((16,), 5.0), "b": jnp.full((4,), -3.0)}
+    out = t(jax.random.PRNGKey(0), g, big)
+    norm = math.sqrt(
+        sum(float(jnp.sum(x**2)) for x in jax.tree.leaves(out))
+    )
+    assert norm == pytest.approx(0.25, rel=1e-5)
+    # a small delta passes through unchanged
+    small = {"w": jnp.full((16,), 0.01), "b": jnp.zeros((4,))}
+    out2 = t(jax.random.PRNGKey(0), g, small)
+    assert _param_diff(out2, small) < 1e-7
+
+
+def test_dp_noise_is_deterministic_per_key():
+    t = make_dp_transform(
+        PrivacyConfig(noise_multiplier=1.0, clip=0.5), num_selected=4
+    )
+    g = {"w": jnp.zeros((8,))}
+    l = {"w": jnp.ones((8,))}
+    a = t(jax.random.PRNGKey(7), g, l)
+    b = t(jax.random.PRNGKey(7), g, l)
+    c = t(jax.random.PRNGKey(8), g, l)
+    assert _param_diff(a, b) == 0.0
+    assert _param_diff(a, c) > 0.0
+
+
+def test_tree_add_normal_leaves_are_independent():
+    tree = {"a": jnp.zeros((32,)), "b": jnp.zeros((32,))}
+    out = tree_add_normal(jax.random.PRNGKey(0), tree, jnp.asarray(1.0))
+    assert float(jnp.abs(out["a"] - out["b"]).max()) > 0.1
+    assert out["a"].shape == (32,)
+
+
+# ---------------------------------------------------------------------------
+# Secure aggregation (mask cancellation)
+# ---------------------------------------------------------------------------
+
+def test_masks_cancel_in_fedavg_sum():
+    base = mask_base_key(0)
+    tmpl = {"w": jnp.ones((6, 5)), "b": jnp.zeros((3,))}
+    K = 6
+    for sel_list in ([1.0] * K, [1.0, 1.0, 0.0, 1.0, 0.0, 1.0]):
+        sel = jnp.asarray(sel_list)
+        stacked = jax.tree.map(
+            lambda x: jnp.stack([x * (k + 1.0) for k in range(K)]), tmpl
+        )
+        masks = [
+            client_mask(base, jnp.asarray(3), jnp.asarray(k), sel, tmpl, 1.0)
+            for k in range(K)
+        ]
+        masked = jax.tree.map(
+            lambda s, *ms: s + jnp.stack(ms), stacked, *masks
+        )
+        plain = fedavg(stacked, weights=sel)
+        secure = fedavg(masked, weights=sel)
+        assert _param_diff(plain, secure) < 1e-5
+
+
+def test_unselected_client_mask_is_zero():
+    base = mask_base_key(0)
+    tmpl = {"w": jnp.ones((4, 4))}
+    sel = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+    m = client_mask(base, jnp.asarray(0), jnp.asarray(1), sel, tmpl, 1.0)
+    assert float(jnp.abs(m["w"]).max()) == 0.0
+    # ... but a selected client's mask is genuinely nonzero
+    m0 = client_mask(base, jnp.asarray(0), jnp.asarray(0), sel, tmpl, 1.0)
+    assert float(jnp.abs(m0["w"]).max()) > 0.1
+
+
+def test_masks_are_deterministic_and_round_dependent():
+    base = mask_base_key(0)
+    tmpl = {"w": jnp.zeros((4,))}
+    sel = jnp.ones((4,))
+    a = client_mask(base, jnp.asarray(1), jnp.asarray(0), sel, tmpl, 1.0)
+    b = client_mask(base, jnp.asarray(1), jnp.asarray(0), sel, tmpl, 1.0)
+    c = client_mask(base, jnp.asarray(2), jnp.asarray(0), sel, tmpl, 1.0)
+    assert _param_diff(a, b) == 0.0 and _param_diff(a, c) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Pack DP
+# ---------------------------------------------------------------------------
+
+def test_pack_sensitivities_both_pack_types(graph):
+    from repro.core import FedGAT
+
+    h = jnp.asarray(graph.features)
+    for engine in ("matrix", "vector"):
+        model = FedGAT(FedGATConfig(engine=engine, degree=8))
+        pack = model.precommunicate(jax.random.PRNGKey(0), graph)
+        sens = pack_sensitivities(pack, h)
+        assert all(v > 0 for v in sens.values()), (engine, sens)
+        noised = noisy_pack(pack_noise_key(0), pack, h, 0.1)
+        assert type(noised) is type(pack)
+        # noised tensors moved; structural fields exactly preserved
+        for name in sens:
+            assert float(
+                jnp.abs(getattr(noised, name) - getattr(pack, name)).max()
+            ) > 0.0
+        if hasattr(pack, "mask4"):
+            np.testing.assert_array_equal(
+                np.asarray(noised.mask4), np.asarray(pack.mask4)
+            )
+        if hasattr(pack, "r"):
+            assert noised.r == pack.r
+    # sigma=0 and None are identity passthroughs
+    assert noisy_pack(pack_noise_key(0), pack, h, 0.0) is pack
+    assert noisy_pack(pack_noise_key(0), None, h, 0.5) is None
+
+
+def test_pack_noise_degrades_gracefully(graph):
+    """More pack noise -> (weakly) larger layer-1 approximation error."""
+    from repro.core import FedGAT, init_params
+
+    params = init_params(
+        jax.random.PRNGKey(0), graph.feature_dim, graph.num_classes,
+        FedGATConfig(),
+    )
+    model = FedGAT(FedGATConfig(engine="matrix", degree=8))
+    pack = model.precommunicate(jax.random.PRNGKey(1), graph)
+    clean = model.apply(params, graph)
+    errs = []
+    h = jnp.asarray(graph.features)
+    for sigma in (0.001, 0.1):
+        model.pack = noisy_pack(pack_noise_key(0), pack, h, sigma)
+        errs.append(float(jnp.abs(model.apply(params, graph) - clean).max()))
+    assert 0 < errs[0] < errs[1]
+
+
+# ---------------------------------------------------------------------------
+# Trainer integration (vmap backend; shard_map in the subprocess test below)
+# ---------------------------------------------------------------------------
+
+_BASE = dict(
+    method="fedgat", num_clients=4, rounds=3, local_steps=2,
+    model=FedGATConfig(engine="direct", degree=8),
+)
+
+
+def test_disabled_privacy_is_bit_identical(graph):
+    r0 = run_federated(graph, FederatedConfig(**_BASE))
+    r1 = run_federated(graph, FederatedConfig(**_BASE, privacy=PrivacyConfig()))
+    assert r0["val_curve"] == r1["val_curve"]
+    assert r0["test_curve"] == r1["test_curve"]
+    for a, b in zip(jax.tree.leaves(r0["params"]), jax.tree.leaves(r1["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert r0["epsilon"] is None and not r0["privacy"]["enabled"]
+
+
+@pytest.mark.parametrize("frac", [1.0, 0.5])
+def test_secure_agg_aggregate_exactness_vmap(graph, frac):
+    """FedAvg's new global IS the round aggregate: one masked round must
+    match the unmasked round to <= 1e-5, with and without dropout."""
+    kw = {**_BASE, "rounds": 1, "client_fraction": frac}
+    r0 = run_federated(graph, FederatedConfig(**kw))
+    rs = run_federated(
+        graph, FederatedConfig(**kw, privacy=PrivacyConfig(secure_agg=True))
+    )
+    assert _param_diff(r0["params"], rs["params"]) < 1e-5
+
+
+def test_dp_training_reports_finite_epsilon(graph):
+    priv = PrivacyConfig(noise_multiplier=1.0, clip=0.5)
+    res = run_federated(graph, FederatedConfig(**_BASE, privacy=priv))
+    assert np.isfinite(res["epsilon"]) and res["epsilon"] > 0
+    assert res["privacy"]["noise_multiplier"] == 1.0
+    assert len(res["test_curve"]) == 3
+    assert all(np.isfinite(v) for v in res["test_curve"])
+    # result epsilon agrees with a hand-driven accountant
+    assert res["epsilon"] == pytest.approx(
+        compute_epsilon(1.0, 3, 1.0, priv.delta)
+    )
+
+
+def test_dp_epsilon_uses_subsampling_rate(graph):
+    priv = PrivacyConfig(noise_multiplier=1.0, clip=0.5)
+    full = run_federated(graph, FederatedConfig(**_BASE, privacy=priv))
+    sub = run_federated(
+        graph,
+        FederatedConfig(**{**_BASE, "client_fraction": 0.5}, privacy=priv),
+    )
+    assert sub["privacy"]["sampling_rate"] == 0.5
+    assert sub["epsilon"] < full["epsilon"]
+
+
+def test_dp_noise_changes_trajectory_deterministically(graph):
+    priv = PrivacyConfig(noise_multiplier=0.5, clip=0.5)
+    a = run_federated(graph, FederatedConfig(**_BASE, privacy=priv))
+    b = run_federated(graph, FederatedConfig(**_BASE, privacy=priv))
+    clean = run_federated(graph, FederatedConfig(**_BASE))
+    assert a["val_curve"] == b["val_curve"]            # same seed, same noise
+    assert _param_diff(a["params"], clean["params"]) > 1e-4
+
+
+def test_pack_dp_through_trainer(graph):
+    from repro.privacy import pack_release_steps
+
+    cfg = FederatedConfig(
+        **{**_BASE, "model": FedGATConfig(engine="matrix", degree=8)},
+        privacy=PrivacyConfig(pack_noise_multiplier=0.05),
+    )
+    res = run_federated(graph, cfg)
+    assert np.isfinite(res["privacy"]["pack_epsilon"])
+    assert res["epsilon"] is None                      # update DP is off
+    assert all(np.isfinite(v) for v in res["test_curve"])
+    # the release is a JOINT mechanism over every noised tensor: its
+    # epsilon composes pack_release_steps() Gaussian steps, strictly more
+    # than a single-tensor release would claim
+    assert pack_release_steps() == 4
+    assert res["privacy"]["pack_epsilon"] == pytest.approx(
+        compute_epsilon(0.05, pack_release_steps(), 1.0, cfg.privacy.delta)
+    )
+    assert res["privacy"]["pack_epsilon"] > compute_epsilon(
+        0.05, 1, 1.0, cfg.privacy.delta
+    )
+
+
+def test_num_selected_matches_schedule(graph):
+    for frac, k, expect in ((1.0, 4, 4), (0.5, 4, 2), (0.1, 4, 1), (0.5, 5, 2)):
+        cfg = FederatedConfig(num_clients=k, client_fraction=frac)
+        assert num_selected(cfg) == expect
+
+
+# ---------------------------------------------------------------------------
+# shard_map backend: same mechanisms, one client per device (subprocess —
+# the forced device count must be set before jax initialises)
+# ---------------------------------------------------------------------------
+
+_SHARD_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import FedGATConfig
+from repro.federated import FederatedConfig, PrivacyConfig, run_federated
+from repro.graphs import make_cora_like
+
+assert len(jax.devices()) == 4, jax.devices()
+g = make_cora_like('tiny', 0)
+base = dict(method='fedgat', num_clients=4, rounds=3, local_steps=2,
+            model=FedGATConfig(engine='direct', degree=8))
+
+def pdiff(a, b):
+    return max(float(jnp.abs(x - y).max())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+# secure-agg aggregate exactness on the psum path, incl dropout
+for frac in (1.0, 0.5):
+    kw = {**base, 'rounds': 1, 'client_fraction': frac}
+    r0 = run_federated(g, FederatedConfig(**kw), backend='shard_map')
+    rs = run_federated(g, FederatedConfig(**kw, privacy=PrivacyConfig(secure_agg=True)),
+                       backend='shard_map')
+    d = pdiff(r0['params'], rs['params'])
+    assert d < 1e-5, (frac, d)
+
+# DP + secure_agg + subsampling: vmap and shard_map share noise keys, so
+# the privatised trajectories must stay in metric lockstep.
+priv = PrivacyConfig(noise_multiplier=1.0, clip=0.5, secure_agg=True)
+cfg = FederatedConfig(**{**base, 'client_fraction': 0.5}, privacy=priv)
+r1 = run_federated(g, cfg, backend='vmap')
+r2 = run_federated(g, cfg, backend='shard_map')
+np.testing.assert_allclose(r1['val_curve'], r2['val_curve'], atol=1e-6)
+np.testing.assert_allclose(r1['test_curve'], r2['test_curve'], atol=1e-6)
+assert np.isfinite(r1['epsilon']) and r1['epsilon'] == r2['epsilon']
+
+# identity privacy config stays bit-compatible with the no-privacy result
+r3 = run_federated(g, FederatedConfig(**base), backend='shard_map')
+r4 = run_federated(g, FederatedConfig(**base, privacy=PrivacyConfig()),
+                   backend='shard_map')
+assert r3['val_curve'] == r4['val_curve']
+assert pdiff(r3['params'], r4['params']) == 0.0
+print('PRIVACY_SHARDED_OK')
+"""
+
+
+def test_privacy_on_shard_map_backend():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARD_SCRIPT],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "PRIVACY_SHARDED_OK" in out.stdout
