@@ -1,0 +1,118 @@
+"""Benchmark-result regression guard.
+
+The CI smokes used to check exit codes only — a figure driver that "ran"
+but emitted an empty row list or NaN metrics passed silently. This guard
+re-reads the emitted JSON under ``benchmarks/results/`` and fails when
+
+  * a results file contains an empty row list (the sweep produced nothing),
+  * any numeric value in any row is NaN,
+  * any numeric value is +/-inf — except keys where infinity is a
+    legitimate sentinel (``clip=inf`` means clipping disabled).
+
+Usage::
+
+    python benchmarks/check_regression.py [paths...]
+
+``paths`` may be JSON files or directories (searched for ``*.json``);
+default is ``benchmarks/results``. Exits non-zero with one line per
+problem found.
+"""
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+import sys
+from typing import Iterator, List, Tuple
+
+RESULTS_DIR = pathlib.Path(__file__).parent / "results"
+
+# Keys where an infinite value is a configuration sentinel, not a broken
+# metric (privacy rows serialise clip=inf for "clipping disabled").
+INF_OK_KEYS = {"clip"}
+
+# Epsilon keys: inf is correct ONLY for a no-noise baseline row (sigma=0
+# means no DP, hence unbounded epsilon); anywhere else it is a regression.
+EPSILON_KEYS = {"epsilon", "epsilon_vs_server", "pack_epsilon"}
+NOISE_KEYS = ("noise_multiplier", "pack_noise_multiplier")
+
+
+def _noise_free_row(row) -> bool:
+    """True when the row is a no-DP baseline (every noise knob it carries
+    is zero), which legitimises an infinite epsilon."""
+    if not isinstance(row, dict):
+        return False
+    knobs = [row[k] for k in NOISE_KEYS if isinstance(row.get(k), (int, float))]
+    return bool(knobs) and all(v == 0 for v in knobs)
+
+
+def _inf_ok(row, key: str) -> bool:
+    if key in INF_OK_KEYS:
+        return True
+    if key not in EPSILON_KEYS:
+        return False
+    if _noise_free_row(row):
+        return True
+    # pack-dp rows never run the update mechanism, so the vs-server update
+    # guarantee is (correctly) unbounded there.
+    return key == "epsilon_vs_server" and (
+        isinstance(row, dict) and row.get("mechanism") == "pack-dp"
+    )
+
+
+def iter_numbers(obj, path: str) -> Iterator[Tuple[str, str, float]]:
+    """Yield (path, key, value) for every float-like leaf in a JSON tree."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            yield from iter_numbers(v, f"{path}.{k}")
+    elif isinstance(obj, (list, tuple)):
+        for i, v in enumerate(obj):
+            yield from iter_numbers(v, f"{path}[{i}]")
+    elif isinstance(obj, float):
+        yield path, path.rsplit(".", 1)[-1].split("[", 1)[0], obj
+
+
+def check_file(path: pathlib.Path) -> List[str]:
+    problems: List[str] = []
+    try:
+        data = json.loads(path.read_text())
+    except (ValueError, OSError) as err:
+        return [f"{path}: unreadable JSON ({err})"]
+    rows = data if isinstance(data, list) else [data]
+    if not rows:
+        problems.append(f"{path}: empty result list — the sweep produced no rows")
+    for i, row in enumerate(rows):
+        for leaf_path, key, x in iter_numbers(row, f"rows[{i}]"):
+            if math.isnan(x):
+                problems.append(f"{path}: {leaf_path} is NaN")
+            elif math.isinf(x) and not _inf_ok(row, key):
+                problems.append(f"{path}: {leaf_path} is {x}")
+    return problems
+
+
+def main(argv: List[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    targets = [pathlib.Path(a) for a in argv] or [RESULTS_DIR]
+    files: List[pathlib.Path] = []
+    for t in targets:
+        if t.is_dir():
+            files.extend(sorted(t.glob("*.json")))
+        else:
+            files.append(t)
+    if not files:
+        print(f"check_regression: no result files under {targets}", file=sys.stderr)
+        return 1
+    problems: List[str] = []
+    for f in files:
+        problems.extend(check_file(f))
+    for p in problems:
+        print(f"FAIL {p}", file=sys.stderr)
+    print(
+        f"check_regression: {len(files)} file(s), "
+        f"{len(problems)} problem(s)", flush=True,
+    )
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

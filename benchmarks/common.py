@@ -4,7 +4,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import pathlib
 import sys
 import time
@@ -17,33 +16,14 @@ BACKEND_CHOICES = ("vmap", "shard_map")
 
 def request_host_devices(n: int) -> None:
     """Make >= n devices available for the shard_map backend (one client per
-    device). On CPU hosts this forces
-    ``--xla_force_host_platform_device_count``; the flag is read lazily at
-    backend initialisation, so this works until the first jax device use
-    (not merely the first ``import jax``). A pre-existing smaller count in
+    device). Delegates to the launch helper: forces
+    ``--xla_force_host_platform_device_count`` (the flag is read lazily at
+    backend initialisation, so this works until the first jax device use,
+    not merely the first ``import jax``); a pre-existing smaller count in
     XLA_FLAGS is raised to ``n``, never lowered."""
-    import re
+    from repro.launch.multiprocess import force_host_device_count
 
-    flag_re = re.compile(r"--xla_force_host_platform_device_count=(\d+)")
-    existing = os.environ.get("XLA_FLAGS", "")
-    m = flag_re.search(existing)
-    count = max(n, int(m.group(1))) if m else n
-    rest = flag_re.sub("", existing).strip()
-    os.environ["XLA_FLAGS"] = (
-        f"{rest} --xla_force_host_platform_device_count={count}".strip()
-    )
-    if "jax" in sys.modules:
-        import jax
-
-        # Initialises the backend if it wasn't yet — with the flag above in
-        # place, so this only fails when it was already too late.
-        if len(jax.devices()) < n:
-            raise RuntimeError(
-                f"shard_map backend needs >= {n} devices but jax already "
-                f"initialised with {len(jax.devices())}; set "
-                f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
-                "before the first jax device use"
-            )
+    force_host_device_count(n)
 
 
 def figure_cli(
@@ -63,17 +43,52 @@ def figure_cli(
     ap = argparse.ArgumentParser(description=f"benchmark {name}")
     ap.add_argument("--backend", choices=BACKEND_CHOICES, default="vmap",
                     help="federated Trainer backend (default: vmap)")
+    ap.add_argument("--processes", type=int, default=1,
+                    help="shard_map only: spread the client mesh over this "
+                    "many cooperating OS processes (repro.launch.multiprocess"
+                    "; every swept client count must divide evenly)")
     ap.add_argument("--fast", action="store_true", help="reduced sweeps")
     ap.add_argument("--dataset", default=default_dataset)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    process_id = 0
+    if args.processes > 1 and args.backend != "shard_map":
+        ap.error("--processes > 1 requires --backend shard_map")
+    if args.processes > 1 and max_clients(args.fast) % args.processes:
+        ap.error(
+            f"client count {max_clients(args.fast)} does not divide evenly "
+            f"over {args.processes} processes (every process hosts an equal "
+            "client block)"
+        )
     if args.backend == "shard_map":
-        request_host_devices(max_clients(args.fast))
+        if args.processes > 1:
+            from repro.launch.multiprocess import (
+                initialize_worker,
+                launch_self,
+                worker_env_active,
+            )
+
+            if not worker_env_active():
+                # Launcher side: re-exec this figure script as N workers;
+                # the children land here again with the worker env set.
+                base = sys.argv if argv is None else [sys.argv[0], *argv]
+                per = -(-max_clients(args.fast) // args.processes)
+                raise SystemExit(
+                    launch_self(base, processes=args.processes,
+                                devices_per_process=per)
+                )
+            process_id, _ = initialize_worker()
+        else:
+            request_host_devices(max_clients(args.fast))
     t0 = time.perf_counter()
     rows = run(fast=args.fast, dataset=args.dataset, seed=args.seed,
                backend=args.backend)
     us = (time.perf_counter() - t0) * 1e6
+    if process_id != 0:
+        return  # only process 0 persists and reports
     out_name = f"{name}_{args.backend}" if args.backend != "vmap" else name
+    if args.processes > 1:
+        out_name = f"{out_name}_p{args.processes}"
     save_results(out_name, rows)
     print("name,us_per_call,derived")
     print(csv_row(out_name, us, derived(rows)), flush=True)

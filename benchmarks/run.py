@@ -25,7 +25,7 @@ from typing import List, Tuple
 from benchmarks.common import csv_row, save_results
 
 # Modules that are infrastructure, not benchmarks.
-_NON_BENCHES = {"common", "run"}
+_NON_BENCHES = {"common", "run", "check_regression"}
 
 
 def discover_benches(

@@ -1,16 +1,22 @@
 """Root pytest config.
 
-Puts ``src/`` on ``sys.path`` (belt-and-braces next to the ``pythonpath``
-ini option) and installs the deterministic ``hypothesis`` fallback when the
+Makes ``repro`` importable for BOTH documented invocations — a plain
+``python -m pytest -q`` from the repo root (no env vars) and an editable
+install (CI): ``src/`` is inserted on ``sys.path`` only when ``repro``
+isn't already importable, so an installed package always wins over the
+checkout. Also installs the deterministic ``hypothesis`` fallback when the
 real library is unavailable, so hermetic containers without the dependency
 still collect and run the property-test files.
 """
 import os
 import sys
 
-_SRC = os.path.join(os.path.dirname(__file__), "src")
-if _SRC not in sys.path:
-    sys.path.insert(0, _SRC)
+try:
+    import repro  # noqa: F401  — installed (editable or wheel) wins
+except ImportError:
+    _SRC = os.path.join(os.path.dirname(__file__), "src")
+    if _SRC not in sys.path:
+        sys.path.insert(0, _SRC)
 
 try:
     import hypothesis  # noqa: F401

@@ -8,7 +8,7 @@ are the edges whose endpoints land on different clients; FedGAT keeps them
 """
 from __future__ import annotations
 
-from typing import List, NamedTuple
+from typing import List, NamedTuple, Optional, Sequence
 
 import numpy as np
 
@@ -52,23 +52,32 @@ def cross_client_edge_count(adj: np.ndarray, part: Partition) -> int:
     return int(np.sum(part.owner[iu] != part.owner[ju]))
 
 
-def client_neighbor_masks(g: Graph, part: Partition) -> np.ndarray:
+def client_neighbor_masks(
+    g: Graph, part: Partition, clients: Optional[Sequence[int]] = None
+) -> np.ndarray:
     """(K, N, B) neighbour masks for the DistGAT baseline: client k sees only
-    edges internal to its node set (self-loops always kept)."""
-    K = part.num_clients
+    edges internal to its node set (self-loops always kept).
+
+    ``clients`` restricts the build to a subset of client ids (rows are
+    returned in the given order) — the multi-process backend uses this so
+    each process materialises only the clients it hosts.
+    """
+    ids = range(part.num_clients) if clients is None else list(clients)
     owner_nb = part.owner[g.nbr_idx]                       # (N, B)
     self_loop = g.nbr_idx == np.arange(g.num_nodes)[:, None]
-    masks = np.zeros((K, g.num_nodes, g.max_degree), dtype=bool)
-    for k in range(K):
+    masks = np.zeros((len(ids), g.num_nodes, g.max_degree), dtype=bool)
+    for i, k in enumerate(ids):
         same = (part.owner[:, None] == k) & (owner_nb == k)
-        masks[k] = g.nbr_mask & (same | (self_loop & (part.owner[:, None] == k)))
+        masks[i] = g.nbr_mask & (same | (self_loop & (part.owner[:, None] == k)))
     return masks
 
 
-def client_train_masks(g: Graph, part: Partition) -> np.ndarray:
-    """(K, N) training-node masks per client."""
-    K = part.num_clients
-    return np.stack([(part.owner == k) & g.train_mask for k in range(K)])
+def client_train_masks(
+    g: Graph, part: Partition, clients: Optional[Sequence[int]] = None
+) -> np.ndarray:
+    """(K, N) training-node masks per client (optionally a client subset)."""
+    ids = range(part.num_clients) if clients is None else list(clients)
+    return np.stack([(part.owner == k) & g.train_mask for k in ids])
 
 
 def l_hop_sizes(g: Graph, part: Partition, L: int) -> np.ndarray:

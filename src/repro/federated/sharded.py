@@ -33,21 +33,42 @@ This backend is reached through the unified entry
 the model construction, local-update math and result schema with the vmap
 backend, and tests assert the two produce identical metric trajectories
 for every (aggregator, client_fraction) combination.
+
+Multi-process execution
+-----------------------
+After ``jax.distributed.initialize`` the SAME code runs as a multi-
+controller SPMD program: ``_client_mesh`` lays the client axis over the
+**global** device list (an equal, contiguous block of clients per process)
+and the input placement switches from plain host arrays to global
+``jax.Array``s built with ``jax.make_array_from_callback`` — each process
+materialises only the client shards it can address (its own clients'
+neighbour/train masks), while replicated operands (params, server state,
+the CS(t) table) are mirrored on every process from the same host-side
+computation. The psum aggregation, CS(t) selection, DP noise streams and
+secure-aggregation masks are all keyed by the *global* client axis index,
+so trajectories are process-layout-independent: a 2-process × 2-device run
+matches the 1-process × 4-device run that the parity tests pin down.
+``repro.launch.multiprocess`` is the launcher that sets this up on CPU.
 """
 from __future__ import annotations
 
 import time
-from typing import Any, Dict
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro._compat.jax_compat import shard_map
 from repro.core.gat import masked_accuracy
 from repro.federated.aggregation import fedadam_update
-from repro.federated.partition import dirichlet_partition
+from repro.federated.partition import (
+    Partition,
+    client_neighbor_masks,
+    client_train_masks,
+    dirichlet_partition,
+)
 from repro.federated.trainer import (
     FederatedConfig,
     build_forward,
@@ -69,13 +90,90 @@ from repro.privacy import (
 
 
 def _client_mesh(num_clients: int) -> Mesh:
+    """One device per client over the *global* device list.
+
+    Single-process: the first ``num_clients`` devices, as before. Multi-
+    process (after ``jax.distributed.initialize``): an equal block of
+    ``num_clients / num_processes`` devices from every process, in process
+    order — client k lives on process ``k // (K / P)``, so each process
+    hosts a contiguous block and the data placement below can materialise
+    exactly those shards.
+    """
     devs = jax.devices()
-    if len(devs) < num_clients:
+    nproc = jax.process_count()
+    if nproc <= 1:
+        if len(devs) < num_clients:
+            raise ValueError(
+                f"need >= {num_clients} devices for {num_clients} clients, have "
+                f"{len(devs)} (set XLA_FLAGS=--xla_force_host_platform_device_count=...)"
+            )
+        return Mesh(np.array(devs[:num_clients]), ("clients",))
+    if num_clients % nproc:
         raise ValueError(
-            f"need >= {num_clients} devices for {num_clients} clients, have "
-            f"{len(devs)} (set XLA_FLAGS=--xla_force_host_platform_device_count=...)"
+            f"num_clients={num_clients} must divide evenly over "
+            f"{nproc} processes (every process hosts an equal client block)"
         )
-    return Mesh(np.array(devs[:num_clients]), ("clients",))
+    per = num_clients // nproc
+    by_proc: Dict[int, list] = {}
+    for d in devs:
+        by_proc.setdefault(d.process_index, []).append(d)
+    chosen = []
+    for p in sorted(by_proc):
+        local = by_proc[p]
+        if len(local) < per:
+            raise ValueError(
+                f"process {p} has {len(local)} devices but hosts {per} of "
+                f"{num_clients} clients (launch with --devices-per-process "
+                f">= {per})"
+            )
+        chosen.extend(local[:per])
+    return Mesh(np.array(chosen), ("clients",))
+
+
+def _spans_processes(mesh: Mesh) -> bool:
+    return len({d.process_index for d in mesh.devices.flat}) > 1
+
+
+def _put_global(mesh: Mesh, spec: P, value) -> jax.Array:
+    """Build a global ``jax.Array`` for one shard_map operand from host data
+    every process computed identically; the callback hands each process only
+    the index slices it can address."""
+    arr = np.asarray(value)
+    sharding = NamedSharding(mesh, spec)
+    return jax.make_array_from_callback(arr.shape, sharding, lambda idx: arr[idx])
+
+
+def _replicate_tree(mesh: Mesh, tree):
+    """Mirror a (host-identical) pytree as fully-replicated global arrays."""
+    return jax.tree.map(lambda x: _put_global(mesh, P(), x), tree)
+
+
+def _stacked_client_input(
+    mesh: Mesh, build: Callable[[int], np.ndarray], shape_tail: Tuple[int, ...]
+) -> jax.Array:
+    """Global ``(K, *shape_tail)`` array, one client per device on the
+    ``clients`` axis. ``build(k)`` produces client k's slice and is invoked
+    only for the clients this process hosts — the multi-process data
+    placement: no process ever materialises another process's shards."""
+    K = int(mesh.devices.size)
+    sharding = NamedSharding(mesh, P("clients"))
+
+    def cb(idx):
+        k = idx[0].start or 0
+        return np.asarray(build(k))[None]
+
+    return jax.make_array_from_callback((K,) + tuple(shape_tail), sharding, cb)
+
+
+def _client_mask_builders(cfg: FederatedConfig, g: Graph, part: Partition):
+    """Per-client (nb_mask, tr_mask) builders mirroring
+    :func:`~repro.federated.trainer.client_masks` one client at a time."""
+    if cfg.method == "distgat":
+        nb = lambda k: client_neighbor_masks(g, part, clients=[k])[0]
+    else:
+        nb = lambda k: g.nbr_mask
+    tr = lambda k: client_train_masks(g, part, clients=[k])[0]
+    return nb, tr
 
 
 def _run_shard_map(g: Graph, cfg: FederatedConfig, mesh: Mesh | None = None) -> Dict[str, Any]:
@@ -87,7 +185,6 @@ def _run_shard_map(g: Graph, cfg: FederatedConfig, mesh: Mesh | None = None) -> 
     k_pack, k_init = jax.random.split(key)
     part = dirichlet_partition(g.labels, K, cfg.beta, cfg.seed)
 
-    nb_masks, tr_masks = client_masks(cfg, g, part)
     init_fn, forward = build_forward(cfg, g, k_pack)
     global_params = init_fn(k_init)
 
@@ -101,9 +198,26 @@ def _run_shard_map(g: Graph, cfg: FederatedConfig, mesh: Mesh | None = None) -> 
 
     if mesh is None:
         mesh = _client_mesh(K)
+    multiprocess = _spans_processes(mesh)
     server_state = adam_init(global_params)
     sel, _ = selection_schedule(cfg)          # (rounds, K) — CS(t) weights
-    sel = jnp.asarray(sel)
+
+    if multiprocess:
+        # Multi-controller placement: every operand becomes a global array;
+        # the per-client masks are materialised ONLY for this process's
+        # addressable client shards.
+        nb_build, tr_build = _client_mask_builders(cfg, g, part)
+        nb_masks = _stacked_client_input(mesh, nb_build, g.nbr_mask.shape)
+        tr_masks = _stacked_client_input(mesh, tr_build, g.train_mask.shape)
+        sel_sharded = _put_global(mesh, P(None, "clients"), sel)
+        sel_full = _put_global(mesh, P(), sel)
+        global_params = _replicate_tree(mesh, global_params)
+        server_state = _replicate_tree(mesh, server_state)
+    else:
+        # Single-process: plain host arrays, exactly the pre-existing path
+        # (jit places them), keeping single-host runs bit-identical.
+        nb_masks, tr_masks = client_masks(cfg, g, part)
+        sel_sharded = sel_full = jnp.asarray(sel)
 
     labels = jnp.asarray(g.labels)
     nbr_mask = jnp.asarray(g.nbr_mask)
@@ -192,7 +306,9 @@ def _run_shard_map(g: Graph, cfg: FederatedConfig, mesh: Mesh | None = None) -> 
             out_specs=(P(), P(), P()),
         )
     )
-    gp, vas, tas = fn(nb_masks, tr_masks, sel, sel, global_params, server_state)
+    gp, vas, tas = fn(
+        nb_masks, tr_masks, sel_sharded, sel_full, global_params, server_state
+    )
     val_curve = [float(x) for x in np.asarray(vas)]
     test_curve = [float(x) for x in np.asarray(tas)]
     return build_result(

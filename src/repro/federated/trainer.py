@@ -269,6 +269,7 @@ def mesh_description(mesh) -> Optional[Dict[str, Any]]:
         "axis_names": [str(n) for n in mesh.axis_names],
         "axis_sizes": [int(s) for s in mesh.devices.shape],
         "num_devices": int(mesh.devices.size),
+        "num_processes": len({d.process_index for d in mesh.devices.flat}),
         "platform": str(mesh.devices.flat[0].platform),
     }
 

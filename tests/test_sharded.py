@@ -49,7 +49,8 @@ for agg in ('fedavg', 'fedprox', 'fedadam'):
 # --- results serialise: mesh is a description, not a live Mesh ------------
 assert r1['mesh'] is None
 assert r2['mesh'] == {'axis_names': ['clients'], 'axis_sizes': [4],
-                      'num_devices': 4, 'platform': 'cpu'}, r2['mesh']
+                      'num_devices': 4, 'num_processes': 1,
+                      'platform': 'cpu'}, r2['mesh']
 json.dumps(r2['mesh'])
 pickle.loads(pickle.dumps({k: v for k, v in r2.items() if k != 'params'}))
 
