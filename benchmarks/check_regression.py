@@ -13,9 +13,14 @@ Usage::
 
     python benchmarks/check_regression.py [paths...]
 
+Serving/latency columns get a stronger rule: a latency percentile or a
+throughput that is zero (or negative) means the run measured nothing, so
+``POSITIVE_KEYS`` must be finite AND strictly positive.
+
 ``paths`` may be JSON files or directories (searched for ``*.json``);
-default is ``benchmarks/results``. Exits non-zero with one line per
-problem found.
+default is ``benchmarks/results`` plus any committed ``BENCH_*.json``
+artifacts at the repo root. Exits non-zero with one line per problem
+found.
 """
 from __future__ import annotations
 
@@ -26,10 +31,15 @@ import sys
 from typing import Iterator, List, Tuple
 
 RESULTS_DIR = pathlib.Path(__file__).parent / "results"
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 # Keys where an infinite value is a configuration sentinel, not a broken
 # metric (privacy rows serialise clip=inf for "clipping disabled").
 INF_OK_KEYS = {"clip"}
+
+# Latency/throughput columns: zero means the run measured nothing (an empty
+# stream or a broken clock), so these must be finite and strictly positive.
+POSITIVE_KEYS = {"p50_ms", "p99_ms", "throughput_qps", "mean_batch"}
 
 # Epsilon keys: inf is correct ONLY for a no-noise baseline row (sigma=0
 # means no DP, hence unbounded epsilon); anywhere else it is a regression.
@@ -87,13 +97,21 @@ def check_file(path: pathlib.Path) -> List[str]:
                 problems.append(f"{path}: {leaf_path} is NaN")
             elif math.isinf(x) and not _inf_ok(row, key):
                 problems.append(f"{path}: {leaf_path} is {x}")
+            elif key in POSITIVE_KEYS and x <= 0:
+                problems.append(
+                    f"{path}: {leaf_path} is {x} (latency/throughput "
+                    "columns must be > 0 — the run measured nothing)"
+                )
     return problems
 
 
 def main(argv: List[str] | None = None) -> int:
     argv = sys.argv[1:] if argv is None else list(argv)
-    targets = [pathlib.Path(a) for a in argv] or [RESULTS_DIR]
+    targets = [pathlib.Path(a) for a in argv]
     files: List[pathlib.Path] = []
+    if not targets:
+        targets = [RESULTS_DIR]
+        files.extend(sorted(REPO_ROOT.glob("BENCH_*.json")))
     for t in targets:
         if t.is_dir():
             files.extend(sorted(t.glob("*.json")))

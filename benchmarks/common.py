@@ -10,8 +10,18 @@ import time
 from typing import Any, Callable, Dict, List
 
 RESULTS_DIR = pathlib.Path(__file__).parent / "results"
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 BACKEND_CHOICES = ("vmap", "shard_map")
+
+
+def write_bench_root(name: str, rows: List[Dict[str, Any]]) -> pathlib.Path:
+    """Write ``BENCH_<name>.json`` at the repo root — the committed,
+    per-run benchmark artifact (kernel_bench/serve_bench emit one on every
+    run; check_regression validates them alongside benchmarks/results)."""
+    path = REPO_ROOT / f"BENCH_{name}.json"
+    path.write_text(json.dumps(rows, indent=1, default=str) + "\n")
+    return path
 
 
 def request_host_devices(n: int) -> None:

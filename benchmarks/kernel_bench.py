@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import timed
+from benchmarks.common import timed, write_bench_root
 from repro.core.chebyshev import attention_series
 from repro.kernels import cheb_attn, flash_attn, poly_attn, ref, select_block_sizes
 
@@ -150,6 +150,7 @@ def run(fast: bool = False) -> List[Dict]:
     err = float(jnp.abs(out_k - ref.poly_attn_ref(q, k, a1, a2, v, pc)).max())
     rows.append({"kernel": "poly_attn", "shape": f"B{B}H{H}S{S}hd{hd}p8",
                  "us_ref_jnp": us_ref, "us_pallas_interpret": us_krn, "max_err": err})
+    write_bench_root("kernel", rows)
     return rows
 
 

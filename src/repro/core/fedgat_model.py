@@ -78,7 +78,7 @@ def init_params(key: Array, d_in: int, num_classes: int, cfg: FedGATConfig):
     return params
 
 
-def _layered_forward(
+def layered_forward(
     engine: Engine,
     params: Sequence[Any],
     coeffs: Optional[Array],
@@ -87,7 +87,11 @@ def _layered_forward(
     nbr_idx: Array,
     nbr_mask: Array,
 ) -> Array:
-    """Engine layer 1 + exact GAT layers l > 1 -> class logits (N, C)."""
+    """Engine layer 1 + exact GAT layers l > 1 -> class logits (N, C).
+
+    Public building block: the serving layer calls it directly with cached
+    (possibly patched) packs instead of going through a facade instance.
+    """
     x = engine.apply(params[0], pack, coeffs, h, nbr_idx, nbr_mask, concat=True)
     x = elu(x)
     # Layers > 1: exact GAT update (paper: post-layer-1 embeddings shareable).
@@ -97,6 +101,9 @@ def _layered_forward(
         if not last:
             x = elu(x)
     return x
+
+
+_layered_forward = layered_forward  # backwards-compatible private alias
 
 
 class FedGAT:
@@ -145,6 +152,26 @@ class FedGAT:
         self.pack = self.engine.precompute(key, h, nbr_idx, nbr_mask)
         self._pack_graph = graph
         return self.pack
+
+    # -- serving hooks ------------------------------------------------------
+
+    def install_pack(self, pack: Optional[Any], graph) -> None:
+        """Adopt an externally built pack (cached or incrementally patched)
+        as the pack for ``graph``. The serving layer uses this to swap a
+        patched pack in without re-running :meth:`precommunicate`."""
+        if pack is not None and not self.engine.needs_pack:
+            raise ValueError(
+                f"engine {self.cfg.engine!r} takes no pack; refusing to "
+                "install one"
+            )
+        self.pack = pack
+        self._pack_graph = graph
+
+    def refresh_pack(self, key: Array, graph) -> Optional[Any]:
+        """Full pack rebuild for ``graph`` (serving's bound-crossed path).
+        Identical to :meth:`precommunicate` — same key, same graph arrays,
+        bit-for-bit the same pack."""
+        return self.precommunicate(key, graph)
 
     def apply(self, params: Sequence[Any], graph, nbr_mask: Optional[Array] = None) -> Array:
         """Forward pass -> class logits (N, C).

@@ -70,7 +70,9 @@ def precompute_vector_pack(
     outer_h_u = jnp.zeros((n, d, g), h.dtype).at[:, :, 0::2].set(
         jnp.transpose(h_nb, (0, 2, 1))
     )
-    M1 = mask1 + h[:, :, None] * sum_u[:, None, :]                  # (N, d, g)
+    # Row-aligned term: pack row i belongs to h[i]. Sliced so callers may
+    # pass extra gather-only rows past n (the serving patch path does).
+    M1 = mask1 + h[:n, :, None] * sum_u[:, None, :]                 # (N, d, g)
     M2 = mask2 + outer_h_u
     K1 = mask3 + jnp.transpose(outer_h_u, (0, 2, 1))                # (N, g, d)
     K3 = mask5 + sum_u

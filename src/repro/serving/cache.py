@@ -1,0 +1,140 @@
+"""Per-client pack cache for the graph inference server.
+
+The FedGAT pack is the one-shot pre-communicated artifact that makes
+federated graph inference cheap (FedGCN frames the same reuse argument):
+building it costs O(N d g^2) while serving from it is a few einsums. The
+cache therefore keys each client's pack on a *fingerprint* of everything
+the pack depends on — node features, padded neighbour lists, the client's
+edge-visibility mask, the engine, and the pack RNG key — so a changed
+partition is a miss, an unchanged one a hit, and an incrementally patched
+pack stays servable under the fingerprint of the graph it was patched to.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Dict, Hashable, Optional
+
+import numpy as np
+
+
+def graph_fingerprint(*arrays: Any, extra: tuple = ()) -> str:
+    """Content hash of the graph arrays a pack was built from.
+
+    Arrays are hashed as (shape, dtype, bytes); ``extra`` mixes in
+    non-array provenance (engine name, r, key bytes, ...).
+    """
+    hsh = hashlib.sha1()
+    for a in arrays:
+        a = np.asarray(a)
+        hsh.update(str(a.shape).encode())
+        hsh.update(str(a.dtype).encode())
+        hsh.update(np.ascontiguousarray(a).tobytes())
+    for e in extra:
+        hsh.update(repr(e).encode())
+    return hsh.hexdigest()
+
+
+@dataclass
+class PackEntry:
+    """One client's cached pack + the fingerprint it is valid for."""
+
+    pack: Any                      # engine payload (None for pack-free engines)
+    fingerprint: str
+    patched: bool = False          # True once an incremental patch was applied
+    builds: int = 1                # full precomputes that produced this slot
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+
+class PackCache:
+    """LRU cache of per-client packs with hit/miss/patch/refresh accounting.
+
+    ``capacity`` bounds the number of resident client entries (None =
+    unbounded); eviction is least-recently-used.
+    """
+
+    def __init__(self, capacity: Optional[int] = None):
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._entries: "OrderedDict[Hashable, PackEntry]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.patches = 0
+        self.refreshes = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, client: Hashable) -> bool:
+        return client in self._entries
+
+    def get(self, client: Hashable, fingerprint: str) -> Optional[PackEntry]:
+        """The client's entry if it matches ``fingerprint`` (a hit), else
+        None (a miss — stale or absent entries both count as misses)."""
+        entry = self._entries.get(client)
+        if entry is not None and entry.fingerprint == fingerprint:
+            self.hits += 1
+            self._entries.move_to_end(client)
+            return entry
+        self.misses += 1
+        return None
+
+    def touch(self, client: Hashable) -> None:
+        """Count a serve from an already-validated resident entry as a hit
+        (the server's per-version logits memo skips the fingerprint check,
+        but the pack is still what answered the query)."""
+        if client in self._entries:
+            self.hits += 1
+            self._entries.move_to_end(client)
+
+    def peek(self, client: Hashable) -> Optional[PackEntry]:
+        """The client's entry regardless of fingerprint (no accounting)."""
+        return self._entries.get(client)
+
+    def put(self, client: Hashable, entry: PackEntry) -> None:
+        """Install a freshly built entry (evicting LRU if over capacity)."""
+        self._entries[client] = entry
+        self._entries.move_to_end(client)
+        while self.capacity is not None and len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def revalidate(self, client: Hashable, fingerprint: str) -> None:
+        """Re-stamp an entry for a new fingerprint without touching the
+        payload — pack-free engines absorb graph deltas exactly, so their
+        (empty) entry just follows the graph."""
+        self._entries[client].fingerprint = fingerprint
+
+    def note_patch(self, client: Hashable, fingerprint: str, pack: Any) -> None:
+        """Record an incremental patch: the entry now serves ``fingerprint``."""
+        entry = self._entries[client]
+        entry.pack = pack
+        entry.fingerprint = fingerprint
+        entry.patched = True
+        self.patches += 1
+
+    def note_refresh(self, client: Hashable, fingerprint: str, pack: Any) -> None:
+        """Record a full rebuild of the client's pack (bound crossed or
+        forced): the entry is fresh again."""
+        entry = self._entries.get(client)
+        if entry is None:
+            entry = PackEntry(pack=pack, fingerprint=fingerprint, builds=0)
+            self._entries[client] = entry
+        entry.pack = pack
+        entry.fingerprint = fingerprint
+        entry.patched = False
+        entry.builds += 1
+        self.refreshes += 1
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "entries": len(self._entries),
+            "hits": self.hits,
+            "misses": self.misses,
+            "patches": self.patches,
+            "refreshes": self.refreshes,
+            "evictions": self.evictions,
+        }

@@ -1,0 +1,108 @@
+"""Serving checkpoint bundles: Trainer params + config provenance.
+
+A bundle is a directory holding
+
+* ``params.npz``  — the trained parameter pytree (repro.checkpoint format);
+* ``meta.json``   — provenance: the effective :class:`FedGATConfig` the
+  method trained (DistGAT's engine substitution already applied), the
+  :class:`PrivacyConfig` the run used, method/backend/num_clients/seed,
+  and the training step.
+
+``load_bundle`` rebuilds the configs, initialises a structurally identical
+parameter template from the serving graph's dimensions, and restores into
+it — so a checkpoint trained by either Trainer backend loads into the
+inference server without pickles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+
+from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+from repro.core.fedgat_model import FedGATConfig, init_params
+from repro.privacy import PrivacyConfig
+
+PARAMS_NAME = "params.npz"
+META_NAME = "meta.json"
+BUNDLE_FORMAT = 1
+
+
+class ServingCheckpoint(NamedTuple):
+    params: Any
+    model: FedGATConfig
+    privacy: PrivacyConfig
+    meta: Dict[str, Any]
+
+
+def save_bundle(
+    path: str,
+    params: Any,
+    fed_cfg: Any,
+    *,
+    step: int = 0,
+    extra: Optional[Dict[str, Any]] = None,
+) -> pathlib.Path:
+    """Write a serving bundle for a Trainer run.
+
+    ``fed_cfg`` is the :class:`~repro.federated.trainer.FederatedConfig`
+    the run trained under; the stored model config is the EFFECTIVE one
+    (``method_model_config``), so a DistGAT checkpoint records the exact
+    engine it actually used.
+    """
+    from repro.federated.trainer import method_model_config
+
+    p = pathlib.Path(path)
+    p.mkdir(parents=True, exist_ok=True)
+    save_checkpoint(str(p / PARAMS_NAME), {"params": params}, step=step)
+    meta = {
+        "format": BUNDLE_FORMAT,
+        "method": fed_cfg.method,
+        "backend": fed_cfg.backend,
+        "num_clients": int(fed_cfg.num_clients),
+        "beta": float(fed_cfg.beta),
+        "seed": int(fed_cfg.seed),
+        "step": int(step),
+        "model": dataclasses.asdict(method_model_config(fed_cfg)),
+        "privacy": dataclasses.asdict(fed_cfg.privacy),
+    }
+    if extra:
+        meta.update(extra)
+    (p / META_NAME).write_text(json.dumps(meta, indent=1, sort_keys=True))
+    return p
+
+
+def load_bundle(path: str, graph: Any) -> ServingCheckpoint:
+    """Restore (params, model config, privacy config, meta) from a bundle.
+
+    ``graph`` supplies the feature/class dimensions for the parameter
+    template — loading against a graph with different dims fails loudly in
+    the shape-checked restore rather than at first query.
+    """
+    p = pathlib.Path(path)
+    meta_path = p / META_NAME
+    if not meta_path.exists():
+        raise FileNotFoundError(f"not a serving bundle (no {META_NAME}): {p}")
+    meta = json.loads(meta_path.read_text())
+    if meta.get("format") != BUNDLE_FORMAT:
+        raise ValueError(
+            f"unsupported bundle format {meta.get('format')!r} "
+            f"(this build reads format {BUNDLE_FORMAT})"
+        )
+    model_kw = dict(meta["model"])
+    model_kw["domain"] = tuple(model_kw["domain"])
+    model_cfg = FedGATConfig(**model_kw)
+    privacy_cfg = PrivacyConfig(**meta["privacy"])
+
+    template = {
+        "params": init_params(
+            jax.random.PRNGKey(0), graph.feature_dim, graph.num_classes, model_cfg
+        )
+    }
+    state, _step = load_checkpoint(str(p / PARAMS_NAME), template)
+    return ServingCheckpoint(
+        params=state["params"], model=model_cfg, privacy=privacy_cfg, meta=meta
+    )

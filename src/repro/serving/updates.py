@@ -1,0 +1,233 @@
+"""Incremental graph updates for the inference server.
+
+New nodes and edges arrive as :class:`GraphDelta` streams. Rebuilding a
+client's pre-communicated pack on every delta would cost the full
+O(N d g^2) precompute, so the server instead applies a *cheap local patch*:
+
+* pack rows are appended for the NEW nodes only (a mini ``precompute`` over
+  just those rows, at the pack's existing padded degree), and
+* existing nodes' rows are left STALE — edges added to an already-packed
+  node are invisible to the pack's moment machinery until a refresh.
+
+The resulting approximation error is tracked explicitly: ``covered``
+records exactly which (i -> j) attention slots the current pack encodes,
+and :func:`mass_drift` measures the attention mass of the uncovered slots
+relative to the covered mass — the eps that the paper's Thm 3.5 chain
+(repro.analysis.error_bounds) propagates to a served-logit bound. The
+server refreshes a client's pack (full precompute, bit-identical to a
+from-scratch ``precommunicate``) only when that bound is crossed.
+
+Engines without a pack (``direct``/``kernel``/``exact``) re-read the graph
+arrays on every forward, so deltas are absorbed exactly and the tracked
+drift stays zero.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.poly_attention import edge_scores, eval_series, head_projections
+from repro.graphs.graph import Graph, make_graph
+
+
+class GraphDelta(NamedTuple):
+    """A batch of graph updates: new nodes (features/labels) and new edges.
+
+    ``edges`` endpoints index the GROWN node set (old nodes keep their ids,
+    new nodes are appended), so an edge may connect old-old, old-new or
+    new-new pairs. ``owners`` optionally assigns new nodes to clients
+    (required when serving the DistGAT method, whose visibility is
+    per-client).
+    """
+
+    features: Optional[np.ndarray] = None    # (M, d) float
+    labels: Optional[np.ndarray] = None      # (M,) int; default 0
+    edges: Optional[np.ndarray] = None       # (E, 2) int
+    owners: Optional[np.ndarray] = None      # (M,) int client ids
+
+    @property
+    def num_new_nodes(self) -> int:
+        return 0 if self.features is None else int(np.asarray(self.features).shape[0])
+
+    @property
+    def num_new_edges(self) -> int:
+        return 0 if self.edges is None else int(np.asarray(self.edges).reshape(-1, 2).shape[0])
+
+
+def apply_delta(g: Graph, delta: GraphDelta, pad_multiple: int = 8) -> Graph:
+    """The updated graph: nodes appended, edges added, neighbour lists
+    rebuilt (new nodes join the val/test/train splits as unlabeled serving
+    nodes — all split masks False)."""
+    n_old = g.num_nodes
+    m = delta.num_new_nodes
+    if m:
+        feats_new = np.asarray(delta.features, np.float32).reshape(m, -1)
+        if feats_new.shape[1] != g.feature_dim:
+            raise ValueError(
+                f"delta features have dim {feats_new.shape[1]}, graph has {g.feature_dim}"
+            )
+        labels_new = (
+            np.zeros(m, np.int32) if delta.labels is None
+            else np.asarray(delta.labels, np.int32).reshape(m)
+        )
+        features = np.concatenate([g.features, feats_new], axis=0)
+        labels = np.concatenate([g.labels, labels_new], axis=0)
+    else:
+        features, labels = g.features, g.labels
+    n_new = n_old + m
+
+    adj = np.zeros((n_new, n_new), dtype=bool)
+    adj[:n_old, :n_old] = g.adj
+    if delta.num_new_edges:
+        edges = np.asarray(delta.edges, np.int64).reshape(-1, 2)
+        if edges.min() < 0 or edges.max() >= n_new:
+            raise ValueError(
+                f"delta edge endpoints must be in [0, {n_new}), got "
+                f"[{edges.min()}, {edges.max()}]"
+            )
+        adj[edges[:, 0], edges[:, 1]] = True
+        adj[edges[:, 1], edges[:, 0]] = True
+
+    def _grow(mask: np.ndarray) -> np.ndarray:
+        return np.concatenate([mask, np.zeros(m, dtype=bool)], axis=0)
+
+    return make_graph(
+        features, labels, adj,
+        _grow(g.train_mask), _grow(g.val_mask), _grow(g.test_mask),
+        g.num_classes, pad_multiple,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pack coverage: which attention slots does the (possibly stale) pack encode?
+# ---------------------------------------------------------------------------
+
+def initial_coverage(g: Graph, visible_mask: Optional[np.ndarray] = None) -> np.ndarray:
+    """(N, N) bool: ``cov[i, j]`` — node i's pack row aggregates neighbour j.
+
+    A freshly precomputed pack covers every (visible) neighbour slot.
+    Directional, matching the row-wise attention aggregation.
+    """
+    valid = g.nbr_mask if visible_mask is None else (g.nbr_mask & visible_mask)
+    cov = np.zeros((g.num_nodes, g.num_nodes), dtype=bool)
+    for i in range(g.num_nodes):
+        cov[i, g.nbr_idx[i][valid[i]]] = True
+    return cov
+
+
+def extend_coverage(
+    cov: np.ndarray,
+    new_graph: Graph,
+    b_pack: int,
+    visible_mask: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Coverage after a patch: old rows unchanged (stale), new-node rows
+    cover their first ``b_pack`` neighbour slots (the patch's capacity —
+    overflow neighbours stay uncovered until a refresh)."""
+    n_old = cov.shape[0]
+    n_new = new_graph.num_nodes
+    out = np.zeros((n_new, n_new), dtype=bool)
+    out[:n_old, :n_old] = cov
+    valid = new_graph.nbr_mask if visible_mask is None else (
+        new_graph.nbr_mask & visible_mask
+    )
+    for i in range(n_old, n_new):
+        js = new_graph.nbr_idx[i, :b_pack][valid[i, :b_pack]]
+        out[i, js] = True
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The cheap local pack patch
+# ---------------------------------------------------------------------------
+
+def concat_pack_rows(pack: Any, rows: Any) -> Any:
+    """Append per-node pack rows (same NamedTuple type, same padded degree);
+    non-array fields (e.g. the Matrix pack's ``r``) are kept from ``pack``."""
+    if type(pack) is not type(rows):
+        raise TypeError(f"pack type mismatch: {type(pack)} vs {type(rows)}")
+    out = []
+    for a, b in zip(pack, rows):
+        if getattr(a, "ndim", 0) >= 1:
+            out.append(jnp.concatenate([jnp.asarray(a), jnp.asarray(b)], axis=0))
+        else:
+            out.append(a)
+    return type(pack)(*out)
+
+
+def patch_pack(
+    engine: Any,
+    key: Any,
+    pack: Any,
+    n_old: int,
+    new_graph: Graph,
+    b_pack: int,
+    visible_mask: Optional[np.ndarray] = None,
+) -> Any:
+    """Append pack rows for the new nodes ``[n_old, N_new)`` at the pack's
+    existing padded degree ``b_pack`` (neighbours beyond that capacity are
+    dropped from the patch and show up as uncovered drift). Existing rows
+    are untouched — that staleness is the tracked approximation."""
+    n_new = new_graph.num_nodes
+    if pack is None or n_new == n_old:
+        return pack
+    m = n_new - n_old
+    # Engines expect pack row i to align with h[i] while neighbour indices
+    # gather anywhere in h — so stack the new nodes' features FIRST (the m
+    # pack rows) followed by the full feature table (gather targets), and
+    # shift the neighbour ids into that full copy.
+    feats = np.asarray(new_graph.features)
+    h_aug = np.concatenate([feats[n_old:], feats], axis=0)
+    idx = new_graph.nbr_idx[n_old:, :b_pack] + m
+    mask = new_graph.nbr_mask[n_old:, :b_pack]
+    if visible_mask is not None:
+        mask = mask & visible_mask[n_old:, :b_pack]
+    rows = engine.precompute(
+        key, jnp.asarray(h_aug), jnp.asarray(idx), jnp.asarray(mask)
+    )
+    return concat_pack_rows(pack, rows)
+
+
+# ---------------------------------------------------------------------------
+# Drift measurement (the eps that feeds the Thm 3.5 chain)
+# ---------------------------------------------------------------------------
+
+def mass_drift(
+    layer1_params: Any,
+    coeffs: Any,
+    basis: str,
+    domain: Tuple[float, float],
+    g: Graph,
+    covered: np.ndarray,
+    visible_mask: Optional[np.ndarray] = None,
+) -> float:
+    """Measured relative attention-mass error of serving from a stale pack.
+
+    For every head/node, the series attention mass of the UNCOVERED slots
+    (edges the pack does not encode) over the mass of the COVERED slots —
+    exactly the score-perturbation eps that Theorem 3 turns into a
+    coefficient error. Evaluating the truncated series over the current
+    edge scores is O(H N B p): far cheaper than the O(N d g^2) pack
+    rebuild it postpones.
+
+    Monotone between refreshes: the covered set never grows under patches
+    (new-node rows enter covered at patch time, before they accrue drift),
+    features are immutable, so uncovered mass only accumulates.
+    """
+    valid = g.nbr_mask if visible_mask is None else (g.nbr_mask & visible_mask)
+    rows = np.arange(g.num_nodes)[:, None]
+    cov_slot = covered[rows, g.nbr_idx] & valid
+    changed = valid & ~cov_slot
+    if not changed.any():
+        return 0.0
+    h = jnp.asarray(g.features)
+    b1, b2 = head_projections(layer1_params)
+    x = edge_scores(b1, b2, h, jnp.asarray(g.nbr_idx))          # (H, N, B)
+    e = np.abs(np.asarray(eval_series(
+        jnp.asarray(coeffs, jnp.float32), x, basis, domain
+    )))
+    missing = (e * changed[None]).sum(axis=-1)                   # (H, N)
+    present = (e * cov_slot[None]).sum(axis=-1)
+    return float(np.max(missing / np.maximum(present, 1e-12)))
