@@ -39,7 +39,13 @@ INF_OK_KEYS = {"clip"}
 
 # Latency/throughput columns: zero means the run measured nothing (an empty
 # stream or a broken clock), so these must be finite and strictly positive.
-POSITIVE_KEYS = {"p50_ms", "p99_ms", "throughput_qps", "mean_batch"}
+# The graph-scaling columns (BENCH_graph.json) are held to the same rule: a
+# zero build time or forward time means the size was skipped, not measured.
+POSITIVE_KEYS = {
+    "p50_ms", "p99_ms", "throughput_qps", "mean_batch",
+    "build_s", "kernel_forward_us", "bucketed_forward_us",
+    "csr_mb", "dense_over_csr",
+}
 
 # Epsilon keys: inf is correct ONLY for a no-noise baseline row (sigma=0
 # means no DP, hence unbounded epsilon); anywhere else it is a regression.

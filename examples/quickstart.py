@@ -15,7 +15,7 @@ from repro.graphs import make_cora_like
 
 def main() -> int:
     graph = make_cora_like("cora_like", seed=0)
-    print(f"graph: {graph.num_nodes} nodes, {int(graph.adj.sum()) // 2} edges, "
+    print(f"graph: {graph.num_nodes} nodes, {graph.num_undirected_edges()} edges, "
           f"{graph.num_classes} classes, max degree {graph.max_degree}")
 
     # --- centralised GAT (the accuracy upper bound, paper Table 1) ---

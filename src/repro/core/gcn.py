@@ -41,3 +41,31 @@ def gcn_forward(params: Sequence[Params], h: Array, a_norm: Array) -> Array:
         if li < len(params) - 1:
             x = jax.nn.relu(x)
     return x
+
+
+def normalized_nbr_coeffs(nbr_idx: np.ndarray, nbr_mask: np.ndarray) -> np.ndarray:
+    """(N, B) float32 GCN coefficients over the padded neighbour lists.
+
+    Row i, slot b holds D^{-1/2}_i * D^{-1/2}_{nbr_idx[i, b]} where valid,
+    0 where padded — the neighbour-list gather form of
+    :func:`normalized_adjacency`, built without any (N, N) array.
+    """
+    deg = nbr_mask.sum(axis=1).astype(np.float32)          # self-loop included
+    d_inv_sqrt = 1.0 / np.sqrt(np.maximum(deg, 1.0))
+    coef = d_inv_sqrt[:, None] * d_inv_sqrt[nbr_idx]
+    return (coef * nbr_mask).astype(np.float32)
+
+
+def gcn_forward_nbr(
+    params: Sequence[Params], h: Array, nbr_idx: Array, coef: Array
+) -> Array:
+    """GCN forward over padded neighbour lists: gather + weighted sum
+    replaces the dense ``a_norm @ x`` matmul. Identical output to
+    :func:`gcn_forward` on the dense normalised adjacency."""
+    x = h
+    for li, p in enumerate(params):
+        xw = x @ p["W"]
+        x = jnp.einsum("nb,nbd->nd", coef, xw[nbr_idx])
+        if li < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x

@@ -1,18 +1,24 @@
-"""Graph partitioning across federated clients.
+"""Graph partitioning across federated clients — CSR-based.
 
 Follows the paper's experimental setup: nodes are assigned to K clients with
 a Dirichlet(beta) label distribution (Hsu, Qi & Brown 2019) — beta=1 is the
 paper's "non-iid" setting, beta=10000 its "iid" setting. Cross-client edges
 are the edges whose endpoints land on different clients; FedGAT keeps them
 (via the pre-training pack), DistGAT drops them.
+
+Everything here runs on the CSR edge lists: halo/frontier expansion is an
+O(E) scatter per hop (no ``adj @ frontier`` matmul), cross-client edges are
+counted from the edge list, and per-client subgraphs (local node set +
+L-hop halo) extract without any (N, N) or (K, N) dense intermediate — the
+primitives the multi-process data placement loads from.
 """
 from __future__ import annotations
 
-from typing import List, NamedTuple, Optional, Sequence
+from typing import List, NamedTuple, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.graphs.graph import Graph
+from repro.graphs.graph import Graph, subgraph as induced_subgraph
 
 
 class Partition(NamedTuple):
@@ -46,9 +52,43 @@ def dirichlet_partition(labels: np.ndarray, num_clients: int, beta: float, seed:
     return Partition(owner=owner, num_clients=num_clients, beta=beta)
 
 
-def cross_client_edge_count(adj: np.ndarray, part: Partition) -> int:
-    """Number of (undirected) edges crossing clients, self-loops excluded."""
-    iu, ju = np.nonzero(np.triu(adj, k=1))
+# ---------------------------------------------------------------------------
+# CSR frontier expansion (the halo primitive; no dense matmul)
+# ---------------------------------------------------------------------------
+
+def frontier_expand(g: Graph, frontier: np.ndarray) -> np.ndarray:
+    """(N,) bool of nodes adjacent to ``frontier`` — one BFS hop over the
+    CSR edge list, O(E). Self-loops keep the frontier inside its own
+    expansion, matching the old ``(adj @ frontier) > 0`` semantics."""
+    frontier = np.asarray(frontier, dtype=bool)
+    live = np.repeat(frontier, g.degrees())        # one flag per CSR slot
+    out = np.zeros(g.num_nodes, dtype=bool)
+    out[g.indices[live]] = True
+    return out
+
+
+def _reach(g: Graph, start: np.ndarray, hops: int) -> np.ndarray:
+    reach = np.asarray(start, dtype=bool).copy()
+    frontier = reach
+    for _ in range(hops):
+        frontier = frontier_expand(g, frontier)
+        reach = reach | frontier
+    return reach
+
+
+def cross_client_edge_count(g: Union[Graph, np.ndarray], part: Partition) -> int:
+    """Number of (undirected) edges crossing clients, self-loops excluded.
+
+    Edge-list based (O(E)) when given a :class:`Graph`; a dense (N, N)
+    adjacency is still accepted for small-graph parity checks against the
+    legacy ``np.triu`` form.
+    """
+    if isinstance(g, Graph):
+        rows = np.repeat(np.arange(g.num_nodes, dtype=np.int64), g.degrees())
+        cols = g.indices
+        upper = rows < cols                        # each edge once, no loops
+        return int(np.sum(part.owner[rows[upper]] != part.owner[cols[upper]]))
+    iu, ju = np.nonzero(np.triu(np.asarray(g), k=1))
     return int(np.sum(part.owner[iu] != part.owner[ju]))
 
 
@@ -61,14 +101,19 @@ def client_neighbor_masks(
     ``clients`` restricts the build to a subset of client ids (rows are
     returned in the given order) — the multi-process backend uses this so
     each process materialises only the clients it hosts.
+
+    A client's mask is nonzero only on rows the client owns, so each mask
+    is filled via its owned-row slice — O(n_k * B) per client, O(N * B)
+    total over all clients (the old form broadcast O(N * B) per client).
     """
     ids = range(part.num_clients) if clients is None else list(clients)
-    owner_nb = part.owner[g.nbr_idx]                       # (N, B)
-    self_loop = g.nbr_idx == np.arange(g.num_nodes)[:, None]
     masks = np.zeros((len(ids), g.num_nodes, g.max_degree), dtype=bool)
     for i, k in enumerate(ids):
-        same = (part.owner[:, None] == k) & (owner_nb == k)
-        masks[i] = g.nbr_mask & (same | (self_loop & (part.owner[:, None] == k)))
+        rows = part.client_nodes(k)
+        nb = g.nbr_idx[rows]                               # (n_k, B)
+        internal = part.owner[nb] == k
+        self_loop = nb == rows[:, None]
+        masks[i, rows] = g.nbr_mask[rows] & (internal | self_loop)
     return masks
 
 
@@ -85,10 +130,48 @@ def l_hop_sizes(g: Graph, part: Partition, L: int) -> np.ndarray:
     K = part.num_clients
     sizes = np.zeros(K, dtype=np.int64)
     for k in range(K):
-        frontier = part.owner == k
-        reach = frontier.copy()
-        for _ in range(L):
-            frontier = (g.adj @ frontier) > 0
-            reach |= frontier
-        sizes[k] = int(reach.sum())
+        sizes[k] = int(_reach(g, part.owner == k, L).sum())
     return sizes
+
+
+# ---------------------------------------------------------------------------
+# Per-client local-subgraph extraction (the per-process loading primitive)
+# ---------------------------------------------------------------------------
+
+class ClientSubgraph(NamedTuple):
+    """One client's locally loadable slice of the global graph.
+
+    ``graph`` is the induced subgraph over the client's local node set plus
+    its ``hops``-hop halo (cross-boundary edges beyond the halo dropped);
+    ``nodes`` maps local ids back to global ids; ``local_mask`` flags which
+    of those nodes the client actually owns (the halo rows exist only to
+    make the owned rows' L-hop aggregations exact).
+    """
+
+    graph: Graph
+    nodes: np.ndarray          # (n_local,) int64 global node ids
+    local_mask: np.ndarray     # (n_local,) bool — owned (non-halo) nodes
+
+    @property
+    def num_halo(self) -> int:
+        return int((~self.local_mask).sum())
+
+
+def client_halo_nodes(g: Graph, part: Partition, k: int, hops: int) -> np.ndarray:
+    """Sorted global ids of client k's local node set + ``hops``-hop halo,
+    via CSR frontier expansion (O(hops * E), no dense matmul)."""
+    return np.nonzero(_reach(g, part.owner == k, hops))[0]
+
+
+def client_subgraph(
+    g: Graph, part: Partition, k: int, hops: int = 1, pad_multiple: int = 8
+) -> ClientSubgraph:
+    """Extract client k's local subgraph (local set + halo) from the CSR
+    encoding. This is the per-process data-placement unit: a process hosting
+    clients ``ks`` needs only ``client_subgraph(g, part, k)`` for k in ks —
+    never the full graph, never anything O(N^2)."""
+    nodes = client_halo_nodes(g, part, k, hops)
+    sub = induced_subgraph(g, nodes, pad_multiple)
+    return ClientSubgraph(
+        graph=sub, nodes=nodes, local_mask=part.owner[nodes] == k
+    )

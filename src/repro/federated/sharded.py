@@ -64,8 +64,10 @@ from repro._compat.jax_compat import shard_map
 from repro.core.gat import masked_accuracy
 from repro.federated.aggregation import fedadam_update
 from repro.federated.partition import (
+    ClientSubgraph,
     Partition,
     client_neighbor_masks,
+    client_subgraph,
     client_train_masks,
     dirichlet_partition,
 )
@@ -163,6 +165,29 @@ def _stacked_client_input(
         return np.asarray(build(k))[None]
 
     return jax.make_array_from_callback((K,) + tuple(shape_tail), sharding, cb)
+
+
+def addressable_clients(mesh: Mesh) -> list:
+    """Client ids (positions on the ``clients`` axis) whose shards this
+    process can address — the set a process is allowed to load data for."""
+    me = jax.process_index()
+    return [
+        k for k, d in enumerate(mesh.devices.flat) if d.process_index == me
+    ]
+
+
+def process_client_subgraphs(
+    g: Graph, part: Partition, mesh: Mesh, hops: int = 1
+) -> Dict[int, ClientSubgraph]:
+    """Per-process graph loading: the local-subgraph (owned nodes +
+    ``hops``-hop halo) of every client this process addresses, extracted
+    via CSR frontier expansion. Nothing O(N^2) and nothing belonging to
+    another process's clients is ever materialised — a process's resident
+    graph bytes are proportional to its own clients' subgraphs, not to the
+    global graph count times K."""
+    return {
+        k: client_subgraph(g, part, k, hops) for k in addressable_clients(mesh)
+    }
 
 
 def _client_mask_builders(cfg: FederatedConfig, g: Graph, part: Partition):

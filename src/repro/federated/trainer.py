@@ -36,7 +36,7 @@ import numpy as np
 
 from repro.core.fedgat_model import FedGAT, FedGATConfig
 from repro.core.gat import masked_accuracy, masked_cross_entropy
-from repro.core.gcn import gcn_forward, init_gcn_params, normalized_adjacency
+from repro.core.gcn import gcn_forward_nbr, init_gcn_params, normalized_nbr_coeffs
 from repro.federated import comm as comm_mod
 from repro.federated.aggregation import fedadam_server, fedavg, fedprox_grad
 from repro.federated.partition import (
@@ -139,13 +139,14 @@ def build_forward(
         return init_fn, forward
     if cfg.method == "fedgcn":
         h = jnp.asarray(g.features)
-        a_norm = jnp.asarray(normalized_adjacency(g.adj))
+        nbr_idx = jnp.asarray(g.nbr_idx)
+        coef = jnp.asarray(normalized_nbr_coeffs(g.nbr_idx, g.nbr_mask))
 
         def init_fn(k):
             return init_gcn_params(k, g.feature_dim, cfg.gcn_hidden, g.num_classes)
 
         def forward(params, nb_mask):  # nb_mask unused: aggregates are exact
-            return gcn_forward(params, h, a_norm)
+            return gcn_forward_nbr(params, h, nbr_idx, coef)
 
         return init_fn, forward
     raise ValueError(f"unknown federated method {cfg.method!r}")
@@ -470,11 +471,12 @@ def train_centralized(
     k_pack, k_init = jax.random.split(key)
 
     if model == "gcn":
-        a_norm = jnp.asarray(normalized_adjacency(g.adj))
+        nbr_idx = jnp.asarray(g.nbr_idx)
+        coef = jnp.asarray(normalized_nbr_coeffs(g.nbr_idx, g.nbr_mask))
         params = init_gcn_params(k_init, g.feature_dim, gcn_hidden, g.num_classes)
 
         def forward(p):
-            return gcn_forward(p, h, a_norm)
+            return gcn_forward_nbr(p, h, nbr_idx, coef)
     else:
         mcfg = mcfg or FedGATConfig(engine="exact" if model == "gat" else "direct")
         net = FedGAT(mcfg)

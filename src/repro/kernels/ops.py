@@ -3,10 +3,11 @@ plus the per-shape block-size autotuner for the FedGAT aggregation kernel."""
 from __future__ import annotations
 
 import os
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.cheb_attn import cheb_attn, cheb_attn_diff
 from repro.kernels.flash_attn import flash_attn
@@ -189,12 +190,122 @@ def cheb_attn_layer(
     return out.mean(axis=0)
 
 
+# ---------------------------------------------------------------------------
+# Degree-bucketed launch plan: bound padded-B waste on skewed-degree graphs
+# ---------------------------------------------------------------------------
+
+def degree_bucket_plan(
+    nbr_mask: np.ndarray, *, pad_multiple: int = 8, max_buckets: int = 4
+) -> List[Tuple[np.ndarray, int]]:
+    """Partition rows into degree buckets for :func:`cheb_attn_layer_bucketed`.
+
+    One flat (N, B) launch pays O(N * B) padded work even when B is set by a
+    handful of hubs. This groups rows by degree into at most ``max_buckets``
+    buckets with power-of-two neighbour capacities (``pad_multiple`` * 2^k,
+    topped by B), so each row's padded slots are within 2x of its degree
+    instead of within B. Returns ``[(row_indices, b_cap), ...]`` covering
+    every row exactly once (empty buckets dropped).
+
+    Host-side only: degrees must be CONCRETE (a NumPy mask, outside jit) —
+    the federated engines trace client visibility masks, so they keep the
+    flat launch; this path serves centralised/serving forwards where the
+    static graph mask is known at trace time.
+    """
+    mask = np.asarray(nbr_mask)
+    deg = mask.sum(axis=1).astype(np.int64)
+    B = mask.shape[1]
+    caps = []
+    c = max(pad_multiple, 1)
+    while c < B:
+        caps.append(c)
+        c *= 2
+    caps.append(B)
+    if len(caps) > max_buckets:
+        caps = caps[-max_buckets:]      # merge the smallest-degree buckets
+    plan = []
+    prev = -1                            # first bucket swallows deg-0 rows
+    for cap in caps:
+        rows = np.nonzero((deg > prev) & (deg <= cap))[0]
+        if len(rows):
+            plan.append((rows, int(cap)))
+        prev = cap
+    return plan
+
+
+def cheb_attn_layer_bucketed(
+    params: Dict,
+    coeffs: Array,
+    h: Array,
+    nbr_idx: np.ndarray,
+    nbr_mask: np.ndarray,
+    *,
+    plan: Optional[List[Tuple[np.ndarray, int]]] = None,
+    basis: str = "power",
+    concat: bool = True,
+    interpret: Optional[bool] = None,
+) -> Array:
+    """:func:`cheb_attn_layer` with a degree-bucketed grid: one pallas_call
+    per degree bucket, each with its neighbour axis trimmed to the bucket
+    capacity. Output is bit-identical to the flat launch (same kernel, same
+    reduction order per row — padded slots contribute exact zeros either
+    way); total padded work drops from O(N * B_max) to ~O(sum_i 2 deg_i).
+
+    ``nbr_idx``/``nbr_mask`` must be concrete (NumPy): trimming relies on
+    valid slots forming a prefix of each padded row, which `csr_to_padded`
+    guarantees.
+    """
+    if basis != "power":
+        raise ValueError("kernel engine evaluates the monomial (power) basis")
+    from repro.core.poly_attention import head_projections
+
+    interp = resolve_interpret(interpret)
+    nbr_idx = np.asarray(nbr_idx)
+    nbr_mask = np.asarray(nbr_mask)
+    if plan is None:
+        plan = degree_bucket_plan(nbr_mask)
+    n, d = h.shape
+    b1, b2 = head_projections(params)
+    s1 = jnp.einsum("nd,hd->hn", h, b1)                   # (H, N)
+    s2 = jnp.einsum("nd,hd->hn", h, b2)
+    heads = s1.shape[0]
+    co = jnp.asarray(coeffs, jnp.float32)
+
+    agg = jnp.zeros((heads, n, d), dtype=h.dtype)
+    for rows, cap in plan:
+        nb = nbr_idx[rows, :cap]                          # (n_k, cap)
+        mask_f = jnp.asarray(nbr_mask[rows, :cap], h.dtype)
+        x = s1[:, rows, None] + s2[:, nb]                 # (H, n_k, cap)
+        h_nb = h[nb] * mask_f[..., None]                  # (n_k, cap, d)
+
+        nk = len(rows)
+        block_n, block_d = select_block_sizes(
+            nk, cap, d, heads=heads, interpret=interp
+        )
+        pad_n = (-nk) % block_n
+        pad_d = (-d) % block_d
+        xp = jnp.pad(x, ((0, 0), (0, pad_n), (0, 0)))
+        hp = jnp.pad(h_nb, ((0, pad_n), (0, 0), (0, pad_d)))
+        mp = jnp.pad(mask_f, ((0, pad_n), (0, 0)))
+        part = cheb_attn_diff(
+            xp, hp, mp, co,
+            min(block_n, nk + pad_n), min(block_d, d + pad_d), interp,
+        )[:, :nk, :d]
+        agg = agg.at[:, rows, :].set(part)
+
+    out = jnp.einsum("hnd,hdo->hno", agg, params["W"])
+    if concat:
+        return jnp.transpose(out, (1, 0, 2)).reshape(n, -1)
+    return out.mean(axis=0)
+
+
 __all__ = [
     "cheb_attn",
     "cheb_attn_diff",
     "flash_attn",
     "poly_attn",
     "cheb_attn_layer",
+    "cheb_attn_layer_bucketed",
+    "degree_bucket_plan",
     "ref",
     "resolve_interpret",
     "select_block_sizes",

@@ -28,9 +28,11 @@ from repro.serving.server import (
     resolve_serving_engine,
 )
 from repro.serving.updates import (
+    Coverage,
     GraphDelta,
     apply_delta,
     concat_pack_rows,
+    coverage_lookup,
     extend_coverage,
     initial_coverage,
     mass_drift,
@@ -38,6 +40,7 @@ from repro.serving.updates import (
 )
 
 __all__ = [
+    "Coverage",
     "GraphDelta",
     "GraphInferenceServer",
     "LatencyStats",
@@ -50,6 +53,7 @@ __all__ = [
     "apply_delta",
     "client_pack_key",
     "concat_pack_rows",
+    "coverage_lookup",
     "extend_coverage",
     "graph_fingerprint",
     "initial_coverage",

@@ -26,6 +26,7 @@ from repro.graphs.graph import Graph
 from repro.serving.cache import PackCache, PackEntry, graph_fingerprint
 from repro.serving.checkpoint import load_bundle
 from repro.serving.updates import (
+    Coverage,
     GraphDelta,
     apply_delta,
     extend_coverage,
@@ -81,7 +82,7 @@ def client_pack_key(base_key: Array, client: int) -> Array:
 class ClientState:
     """Server-side drift bookkeeping for one client's cached pack."""
 
-    covered: Optional[np.ndarray] = None   # (N, N) slots the pack encodes
+    covered: Optional[Coverage] = None     # sparse slot set the pack encodes
     b_pack: int = 0                        # pack's padded-degree capacity
     eps: float = 0.0                       # tracked Thm 3.5 score-mass error
     refreshes: int = 0
@@ -217,8 +218,11 @@ class GraphInferenceServer:
         return vis
 
     def _fingerprint(self, client: int) -> str:
+        # Content-addressed on the CSR arrays: nbr_idx/nbr_mask derive
+        # deterministically from (indptr, indices), so hashing the CSR pair
+        # covers them at O(E) bytes instead of O(N * B).
         return graph_fingerprint(
-            self.graph.features, self.graph.nbr_idx, self.graph.nbr_mask,
+            self.graph.features, self.graph.indptr, self.graph.indices,
             self._visible_mask_np(client),
             np.asarray(client_pack_key(self.pack_key, client)),
             extra=(self.cfg.engine, self.cfg.degree, self.cfg.basis,

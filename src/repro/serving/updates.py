@@ -29,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.poly_attention import edge_scores, eval_series, head_projections
-from repro.graphs.graph import Graph, make_graph
+from repro.graphs.graph import Graph, edge_list, make_graph_from_edges
 
 
 class GraphDelta(NamedTuple):
@@ -59,7 +59,12 @@ class GraphDelta(NamedTuple):
 def apply_delta(g: Graph, delta: GraphDelta, pad_multiple: int = 8) -> Graph:
     """The updated graph: nodes appended, edges added, neighbour lists
     rebuilt (new nodes join the val/test/train splits as unlabeled serving
-    nodes — all split masks False)."""
+    nodes — all split masks False).
+
+    Edge-list based throughout: the old graph contributes ``edge_list(g)``,
+    the delta its new pairs, and the CSR build dedups/symmetrises — a delta
+    on a 1e5-node graph costs O(N + E), never an (N, N) array.
+    """
     n_old = g.num_nodes
     m = delta.num_new_nodes
     if m:
@@ -78,23 +83,23 @@ def apply_delta(g: Graph, delta: GraphDelta, pad_multiple: int = 8) -> Graph:
         features, labels = g.features, g.labels
     n_new = n_old + m
 
-    adj = np.zeros((n_new, n_new), dtype=bool)
-    adj[:n_old, :n_old] = g.adj
+    old_edges = edge_list(g)
     if delta.num_new_edges:
-        edges = np.asarray(delta.edges, np.int64).reshape(-1, 2)
-        if edges.min() < 0 or edges.max() >= n_new:
+        new_edges = np.asarray(delta.edges, np.int64).reshape(-1, 2)
+        if new_edges.min() < 0 or new_edges.max() >= n_new:
             raise ValueError(
                 f"delta edge endpoints must be in [0, {n_new}), got "
-                f"[{edges.min()}, {edges.max()}]"
+                f"[{new_edges.min()}, {new_edges.max()}]"
             )
-        adj[edges[:, 0], edges[:, 1]] = True
-        adj[edges[:, 1], edges[:, 0]] = True
+        edges = np.concatenate([old_edges, new_edges], axis=0)
+    else:
+        edges = old_edges
 
     def _grow(mask: np.ndarray) -> np.ndarray:
         return np.concatenate([mask, np.zeros(m, dtype=bool)], axis=0)
 
-    return make_graph(
-        features, labels, adj,
+    return make_graph_from_edges(
+        features, labels, edges,
         _grow(g.train_mask), _grow(g.val_mask), _grow(g.test_mask),
         g.num_classes, pad_multiple,
     )
@@ -104,39 +109,75 @@ def apply_delta(g: Graph, delta: GraphDelta, pad_multiple: int = 8) -> Graph:
 # Pack coverage: which attention slots does the (possibly stale) pack encode?
 # ---------------------------------------------------------------------------
 
-def initial_coverage(g: Graph, visible_mask: Optional[np.ndarray] = None) -> np.ndarray:
-    """(N, N) bool: ``cov[i, j]`` — node i's pack row aggregates neighbour j.
+class Coverage(NamedTuple):
+    """Sparse set of directed (i -> j) attention slots the pack encodes.
 
-    A freshly precomputed pack covers every (visible) neighbour slot.
-    Directional, matching the row-wise attention aggregation.
+    ``keys`` holds ``i * num_nodes + j`` for each covered slot, sorted and
+    unique — membership is a searchsorted, storage is O(covered slots).
+    (The predecessor was an (N, N) bool matrix, which alone would dwarf the
+    graph itself at serving scale.)
     """
+
+    num_nodes: int
+    keys: np.ndarray            # (nnz,) sorted unique int64
+
+    @property
+    def num_covered(self) -> int:
+        return int(self.keys.shape[0])
+
+
+def _slot_keys(
+    g: Graph, rows: np.ndarray, valid: np.ndarray, num_nodes: int
+) -> np.ndarray:
+    """int64 keys of the valid (row, neighbour) slots of ``rows``."""
+    r, s = np.nonzero(valid[rows])
+    return rows[r].astype(np.int64) * num_nodes + g.nbr_idx[rows][r, s]
+
+
+def initial_coverage(g: Graph, visible_mask: Optional[np.ndarray] = None) -> Coverage:
+    """Coverage of a freshly precomputed pack: every (visible) neighbour
+    slot. Directional, matching the row-wise attention aggregation."""
     valid = g.nbr_mask if visible_mask is None else (g.nbr_mask & visible_mask)
-    cov = np.zeros((g.num_nodes, g.num_nodes), dtype=bool)
-    for i in range(g.num_nodes):
-        cov[i, g.nbr_idx[i][valid[i]]] = True
-    return cov
+    rows = np.arange(g.num_nodes)
+    keys = _slot_keys(g, rows, valid, g.num_nodes)
+    return Coverage(num_nodes=g.num_nodes, keys=np.unique(keys))
 
 
 def extend_coverage(
-    cov: np.ndarray,
+    cov: Coverage,
     new_graph: Graph,
     b_pack: int,
     visible_mask: Optional[np.ndarray] = None,
-) -> np.ndarray:
-    """Coverage after a patch: old rows unchanged (stale), new-node rows
+) -> Coverage:
+    """Coverage after a patch: old slots unchanged (stale), new-node rows
     cover their first ``b_pack`` neighbour slots (the patch's capacity —
     overflow neighbours stay uncovered until a refresh)."""
-    n_old = cov.shape[0]
+    n_old = cov.num_nodes
     n_new = new_graph.num_nodes
-    out = np.zeros((n_new, n_new), dtype=bool)
-    out[:n_old, :n_old] = cov
+    i, j = np.divmod(cov.keys, n_old)          # rekey into the grown id space
+    old_keys = i * n_new + j
     valid = new_graph.nbr_mask if visible_mask is None else (
         new_graph.nbr_mask & visible_mask
     )
-    for i in range(n_old, n_new):
-        js = new_graph.nbr_idx[i, :b_pack][valid[i, :b_pack]]
-        out[i, js] = True
-    return out
+    valid = valid.copy()
+    valid[:, b_pack:] = False                  # patch capacity
+    rows = np.arange(n_old, n_new)
+    new_keys = _slot_keys(new_graph, rows, valid, n_new)
+    return Coverage(
+        num_nodes=n_new, keys=np.unique(np.concatenate([old_keys, new_keys]))
+    )
+
+
+def coverage_lookup(cov: Coverage, nbr_idx: np.ndarray) -> np.ndarray:
+    """(N, B) bool: is slot (i, nbr_idx[i, b]) covered? Vectorised
+    searchsorted over the sorted key set."""
+    n = cov.num_nodes
+    q = np.arange(n, dtype=np.int64)[:, None] * n + nbr_idx
+    if cov.keys.size == 0:
+        return np.zeros(q.shape, dtype=bool)
+    pos = np.searchsorted(cov.keys, q)
+    pos_c = np.minimum(pos, cov.keys.size - 1)
+    return cov.keys[pos_c] == q
 
 
 # ---------------------------------------------------------------------------
@@ -200,7 +241,7 @@ def mass_drift(
     basis: str,
     domain: Tuple[float, float],
     g: Graph,
-    covered: np.ndarray,
+    covered: Coverage,
     visible_mask: Optional[np.ndarray] = None,
 ) -> float:
     """Measured relative attention-mass error of serving from a stale pack.
@@ -217,8 +258,7 @@ def mass_drift(
     features are immutable, so uncovered mass only accumulates.
     """
     valid = g.nbr_mask if visible_mask is None else (g.nbr_mask & visible_mask)
-    rows = np.arange(g.num_nodes)[:, None]
-    cov_slot = covered[rows, g.nbr_idx] & valid
+    cov_slot = coverage_lookup(covered, g.nbr_idx) & valid
     changed = valid & ~cov_slot
     if not changed.any():
         return 0.0

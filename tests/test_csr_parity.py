@@ -1,0 +1,401 @@
+"""CSR-first refactor parity suite.
+
+Property-style checks on random small graphs: the legacy dense-adjacency
+path and the new edge-list/CSR path must agree bit-for-bit — identical
+``Graph`` fields, identical engine packs, identical Trainer metrics — and
+every rewritten O(E) primitive (halo expansion, cross-client edge count,
+client masks, coverage, delta application) must reproduce its dense
+reference form exactly.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import FedGATConfig
+from repro.core.engine import registered_engines
+from repro.core.fedgat_model import FedGAT
+from repro.federated import FederatedConfig, run_federated
+from repro.federated.partition import (
+    _reach,
+    client_neighbor_masks,
+    client_subgraph,
+    cross_client_edge_count,
+    dirichlet_partition,
+    frontier_expand,
+    l_hop_sizes,
+)
+from repro.graphs import (
+    DenseAdjacencyError,
+    build_neighbor_lists,
+    dense_view_count,
+    make_cora_like,
+    make_graph,
+    make_graph_from_edges,
+    make_sbm,
+    reset_dense_view_count,
+    sample_neighbors,
+    subgraph,
+)
+from repro.serving.updates import (
+    GraphDelta,
+    apply_delta,
+    coverage_lookup,
+    extend_coverage,
+    initial_coverage,
+)
+
+GRAPH_FIELDS = (
+    "features", "labels", "indptr", "indices", "nbr_idx", "nbr_mask",
+    "train_mask", "val_mask", "test_mask",
+)
+
+
+def _random_dense_graph(seed, n=None):
+    """A random small graph in BOTH input forms: (dense adj, edge list)."""
+    rng = np.random.default_rng(seed)
+    n = n or int(rng.integers(12, 60))
+    d, C = int(rng.integers(4, 12)), int(rng.integers(2, 5))
+    upper = np.triu(rng.random((n, n)) < 0.15, k=1)
+    adj = upper | upper.T
+    feats = rng.random((n, d)).astype(np.float32)
+    labels = rng.integers(0, C, size=n).astype(np.int32)
+    tr = rng.random(n) < 0.3
+    va = ~tr & (rng.random(n) < 0.3)
+    te = ~tr & ~va
+    edges = np.stack(np.nonzero(upper), axis=1)
+    args = (feats, labels, tr, va, te, C)
+    return adj, edges, args
+
+
+def _assert_graphs_identical(ga, gb):
+    for f in GRAPH_FIELDS:
+        assert np.array_equal(getattr(ga, f), getattr(gb, f)), f
+    assert ga.num_classes == gb.num_classes
+
+
+# ---------------------------------------------------------------------------
+# Graph core: dense path vs CSR path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(6))
+def test_dense_and_edge_constructors_bitwise_identical(seed):
+    adj, edges, (feats, labels, tr, va, te, C) = _random_dense_graph(seed)
+    ga = make_graph(feats, labels, adj, tr, va, te, C)
+    gb = make_graph_from_edges(feats, labels, edges, tr, va, te, C)
+    _assert_graphs_identical(ga, gb)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_build_neighbor_lists_matches_legacy_loop(seed):
+    adj, edges, _ = _random_dense_graph(seed)
+    full = np.asarray(adj).copy()
+    np.fill_diagonal(full, True)
+    idx, mask = build_neighbor_lists(full)
+    # legacy per-node reference
+    n = full.shape[0]
+    for i in range(n):
+        nbrs = np.nonzero(full[i])[0]
+        assert np.array_equal(idx[i][mask[i]], nbrs)
+        assert not mask[i][len(nbrs):].any()
+    # edge-list input form agrees
+    idx2, mask2 = build_neighbor_lists(edges, num_nodes=n)
+    assert np.array_equal(idx, idx2) and np.array_equal(mask, mask2)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_subgraph_matches_dense_submatrix(seed):
+    adj, _, (feats, labels, tr, va, te, C) = _random_dense_graph(seed, n=40)
+    g = make_graph(feats, labels, adj, tr, va, te, C)
+    rng = np.random.default_rng(seed + 100)
+    nodes = np.sort(rng.choice(g.num_nodes, size=17, replace=False))
+    sub = subgraph(g, nodes)
+    dense_sub = np.asarray(g.adj)[np.ix_(nodes, nodes)]
+    ref = make_graph(
+        feats[nodes], labels[nodes], dense_sub,
+        tr[nodes], va[nodes], te[nodes], C,
+    )
+    _assert_graphs_identical(sub, ref)
+
+
+def test_dense_view_counter_and_limit(monkeypatch):
+    g = make_cora_like("tiny")
+    reset_dense_view_count()
+    assert dense_view_count() == 0
+    _ = g.adj
+    _ = g.adj
+    assert dense_view_count() == 2
+    monkeypatch.setenv("REPRO_DENSE_ADJ_MAX", "10")
+    with pytest.raises(DenseAdjacencyError):
+        _ = g.adj
+    reset_dense_view_count()
+
+
+def test_sample_neighbors_deterministic_capped_keeps_self_loops():
+    g = make_cora_like("cora_like")
+    cap = 4
+    g1 = sample_neighbors(g, cap, seed=7)
+    g2 = sample_neighbors(g, cap, seed=7)
+    _assert_graphs_identical(g1, g2)
+    g3 = sample_neighbors(g, cap, seed=8)
+    assert not np.array_equal(g1.indices, g3.indices)  # keyed, not fixed
+    deg = g1.degrees()
+    assert deg.max() <= cap
+    # every kept edge existed; every self-loop survived
+    rows = np.repeat(np.arange(g1.num_nodes), deg)
+    orig = set(map(tuple, np.stack(
+        [np.repeat(np.arange(g.num_nodes), g.degrees()), g.indices], axis=1
+    )))
+    assert all((i, j) in orig for i, j in zip(rows, g1.indices))
+    assert all(
+        np.isin(i, g1.indices[g1.indptr[i]:g1.indptr[i + 1]])
+        for i in range(g1.num_nodes)
+    )
+
+
+def test_sbm_preset_scales_without_dense_adjacency():
+    reset_dense_view_count()
+    g = make_sbm("sbm_1k", seed=0)
+    assert dense_view_count() == 0
+    assert g.num_nodes == 1_000 and g.num_classes == 8
+    avg_deg = g.degrees().mean()
+    assert 4.0 < avg_deg <= 17.0
+    assert g.train_mask.sum() > 0 and g.test_mask.sum() > 0
+    assert not (g.train_mask & g.val_mask).any()
+    assert g.max_degree >= 8
+
+
+# ---------------------------------------------------------------------------
+# Federated layer: O(E) forms vs dense reference forms
+# ---------------------------------------------------------------------------
+
+def _dense_reach(g, start, hops):
+    adj = np.asarray(g.adj)
+    reach = np.asarray(start, bool).copy()
+    frontier = reach.copy()
+    for _ in range(hops):
+        frontier = (adj @ frontier) > 0
+        reach = reach | frontier
+    return reach
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_halo_and_cross_count_match_dense_forms(seed):
+    adj, _, (feats, labels, tr, va, te, C) = _random_dense_graph(seed, n=50)
+    g = make_graph(feats, labels, adj, tr, va, te, C)
+    part = dirichlet_partition(g.labels, 3, 1.0, seed=seed)
+    # cross-client edges: edge-list form vs np.triu form
+    dense = np.asarray(g.adj)
+    iu, ju = np.nonzero(np.triu(dense, k=1))
+    want = int(np.sum(part.owner[iu] != part.owner[ju]))
+    assert cross_client_edge_count(g, part) == want
+    assert cross_client_edge_count(dense, part) == want
+    # frontier expansion vs adj @ frontier
+    for k in range(3):
+        start = part.owner == k
+        assert np.array_equal(
+            frontier_expand(g, start), (dense @ start) > 0
+        )
+        for hops in (1, 2):
+            assert np.array_equal(
+                _reach(g, start, hops), _dense_reach(g, start, hops)
+            )
+    sizes = l_hop_sizes(g, part, 2)
+    assert np.array_equal(
+        sizes, [_dense_reach(g, part.owner == k, 2).sum() for k in range(3)]
+    )
+
+
+def test_client_neighbor_masks_match_dense_broadcast_form():
+    g = make_cora_like("tiny")
+    part = dirichlet_partition(g.labels, 3, 1.0, seed=1)
+    got = client_neighbor_masks(g, part)
+    # the pre-refactor O(K*N*B) broadcast form
+    owner_nb = part.owner[g.nbr_idx]
+    self_loop = g.nbr_idx == np.arange(g.num_nodes)[:, None]
+    for k in range(3):
+        same = (part.owner[:, None] == k) & (owner_nb == k)
+        want = g.nbr_mask & (same | (self_loop & (part.owner[:, None] == k)))
+        assert np.array_equal(got[k], want)
+    sub = client_neighbor_masks(g, part, clients=[2, 0])
+    assert np.array_equal(sub[0], got[2]) and np.array_equal(sub[1], got[0])
+
+
+def test_client_subgraph_is_reach_set_induced():
+    g = make_cora_like("tiny")
+    part = dirichlet_partition(g.labels, 3, 1.0, seed=2)
+    for k in range(3):
+        cs = client_subgraph(g, part, k, hops=1)
+        want_nodes = np.nonzero(_dense_reach(g, part.owner == k, 1))[0]
+        assert np.array_equal(cs.nodes, want_nodes)
+        assert np.array_equal(cs.local_mask, part.owner[cs.nodes] == k)
+        ref = subgraph(g, cs.nodes)
+        _assert_graphs_identical(cs.graph, ref)
+        assert cs.num_halo == int((part.owner[cs.nodes] != k).sum())
+
+
+# ---------------------------------------------------------------------------
+# Serving: edge-list deltas + sparse coverage vs dense reference
+# ---------------------------------------------------------------------------
+
+def test_apply_delta_matches_dense_reference():
+    g = make_cora_like("tiny")
+    rng = np.random.default_rng(0)
+    m = 3
+    delta = GraphDelta(
+        features=rng.random((m, g.feature_dim), dtype=np.float32),
+        edges=np.array([[0, g.num_nodes], [g.num_nodes, g.num_nodes + 1],
+                        [5, g.num_nodes + 2], [1, 2]]),
+    )
+    g2 = apply_delta(g, delta)
+    # dense reference: grow the adjacency matrix, rebuild via the dense path
+    n_new = g.num_nodes + m
+    adj = np.zeros((n_new, n_new), dtype=bool)
+    adj[: g.num_nodes, : g.num_nodes] = np.asarray(g.adj)
+    e = np.asarray(delta.edges)
+    adj[e[:, 0], e[:, 1]] = True
+    adj[e[:, 1], e[:, 0]] = True
+    grow = lambda msk: np.concatenate([msk, np.zeros(m, bool)])
+    ref = make_graph(
+        np.concatenate([g.features, np.asarray(delta.features, np.float32)]),
+        np.concatenate([g.labels, np.zeros(m, np.int32)]),
+        adj, grow(g.train_mask), grow(g.val_mask), grow(g.test_mask),
+        g.num_classes,
+    )
+    _assert_graphs_identical(g2, ref)
+
+
+def test_sparse_coverage_matches_dense_reference():
+    g = make_cora_like("tiny")
+    rng = np.random.default_rng(1)
+
+    def dense_initial(gg, valid):
+        cov = np.zeros((gg.num_nodes, gg.num_nodes), dtype=bool)
+        for i in range(gg.num_nodes):
+            cov[i, gg.nbr_idx[i][valid[i]]] = True
+        return cov
+
+    cov = initial_coverage(g)
+    dc = dense_initial(g, g.nbr_mask)
+    rows = np.arange(g.num_nodes)[:, None]
+    assert np.array_equal(coverage_lookup(cov, g.nbr_idx), dc[rows, g.nbr_idx])
+
+    m = 2
+    delta = GraphDelta(
+        features=rng.random((m, g.feature_dim), dtype=np.float32),
+        edges=np.array([[0, g.num_nodes], [3, g.num_nodes + 1]]),
+    )
+    g2 = apply_delta(g, delta)
+    b_pack = g.max_degree
+    cov2 = extend_coverage(cov, g2, b_pack)
+    # dense reference: old rows stale, new rows cover first b_pack slots
+    n_old, n_new = g.num_nodes, g2.num_nodes
+    d2 = np.zeros((n_new, n_new), dtype=bool)
+    d2[:n_old, :n_old] = dc
+    for i in range(n_old, n_new):
+        js = g2.nbr_idx[i, :b_pack][g2.nbr_mask[i, :b_pack]]
+        d2[i, js] = True
+    rows2 = np.arange(n_new)[:, None]
+    assert np.array_equal(
+        coverage_lookup(cov2, g2.nbr_idx), d2[rows2, g2.nbr_idx]
+    )
+
+
+# ---------------------------------------------------------------------------
+# Engines + Trainer: identical packs and metrics from either build path
+# ---------------------------------------------------------------------------
+
+def _both_builds(seed=0):
+    adj, edges, (feats, labels, tr, va, te, C) = _random_dense_graph(seed, n=48)
+    ga = make_graph(feats, labels, adj, tr, va, te, C)
+    gb = make_graph_from_edges(feats, labels, edges, tr, va, te, C)
+    return ga, gb
+
+
+@pytest.mark.parametrize("engine", sorted(registered_engines()))
+def test_engine_packs_and_outputs_identical_across_build_paths(engine):
+    ga, gb = _both_builds()
+    cfg = FedGATConfig(engine=engine, degree=6)
+    outs = []
+    for g in (ga, gb):
+        model = FedGAT(cfg)
+        key = jax.random.PRNGKey(0)
+        model.precommunicate(key, g)
+        params = model.init(jax.random.PRNGKey(1), g)
+        outs.append((model.pack, np.asarray(model.apply(params, g))))
+    pack_a, out_a = outs[0]
+    pack_b, out_b = outs[1]
+    if pack_a is None:
+        assert pack_b is None
+    else:
+        for la, lb in zip(jax.tree.leaves(pack_a), jax.tree.leaves(pack_b)):
+            assert np.array_equal(np.asarray(la), np.asarray(lb))
+    assert np.array_equal(out_a, out_b)
+
+
+@pytest.mark.parametrize("engine", sorted(registered_engines()))
+def test_trainer_metrics_identical_across_build_paths(engine):
+    ga, gb = _both_builds(seed=3)
+    cfg = FederatedConfig(
+        method="fedgat", num_clients=2, rounds=2, local_steps=1, seed=0,
+        model=FedGATConfig(engine=engine, degree=6),
+    )
+    ra = run_federated(ga, cfg, backend="vmap")
+    rb = run_federated(gb, cfg, backend="vmap")
+    assert ra["val_curve"] == rb["val_curve"]
+    assert ra["test_curve"] == rb["test_curve"]
+    for la, lb in zip(
+        jax.tree.leaves(ra["params"]), jax.tree.leaves(rb["params"])
+    ):
+        assert np.array_equal(np.asarray(la), np.asarray(lb))
+
+
+# The shard_map leg needs a client-per-device layout, so it runs in a
+# subprocess with XLA host-device forcing (same pattern as test_sharded.py).
+SHARD_SCRIPT = r"""
+import numpy as np, jax
+from repro.core import FedGATConfig
+from repro.core.engine import registered_engines
+from repro.federated import FederatedConfig, run_federated
+from repro.graphs import make_graph, make_graph_from_edges
+
+assert len(jax.devices()) == 2, jax.devices()
+rng = np.random.default_rng(3)
+n, d, C = 48, 8, 3
+upper = np.triu(rng.random((n, n)) < 0.15, k=1)
+adj = upper | upper.T
+edges = np.stack(np.nonzero(upper), axis=1)
+feats = rng.random((n, d)).astype(np.float32)
+labels = rng.integers(0, C, size=n).astype(np.int32)
+tr = rng.random(n) < 0.3
+va = ~tr & (rng.random(n) < 0.3)
+te = ~tr & ~va
+ga = make_graph(feats, labels, adj, tr, va, te, C)
+gb = make_graph_from_edges(feats, labels, edges, tr, va, te, C)
+
+for engine in sorted(registered_engines()):
+    cfg = FederatedConfig(
+        method='fedgat', num_clients=2, rounds=2, local_steps=1, seed=0,
+        model=FedGATConfig(engine=engine, degree=6),
+    )
+    ra = run_federated(ga, cfg, backend='shard_map')
+    rb = run_federated(gb, cfg, backend='shard_map')
+    assert ra['val_curve'] == rb['val_curve'], engine
+    assert ra['test_curve'] == rb['test_curve'], engine
+print('CSR_SHARD_OK')
+"""
+
+
+def test_trainer_metrics_identical_across_build_paths_shard_map():
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", SHARD_SCRIPT],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "CSR_SHARD_OK" in out.stdout
