@@ -45,6 +45,7 @@ POSITIVE_KEYS = {
     "p50_ms", "p99_ms", "throughput_qps", "mean_batch",
     "build_s", "kernel_forward_us", "bucketed_forward_us",
     "csr_mb", "dense_over_csr",
+    "rounds_per_s", "peak_rss_mb",
 }
 
 # Epsilon keys: inf is correct ONLY for a no-noise baseline row (sigma=0

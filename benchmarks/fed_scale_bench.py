@@ -1,0 +1,105 @@
+"""Population-scale federated rounds: K clients streamed over 8 devices.
+
+The cohort scheduler (federated/cohort.py) decouples the client population
+from the device count, so K sweeps {8, 128, 1024} on 8 forced host devices
+— the configuration both Trainer backends previously capped at K=8 for
+shard_map. Each row records rounds/s and the process peak RSS, making the
+O(devices)-not-O(K) round-memory claim a tracked number.
+
+  PYTHONPATH=src python benchmarks/fed_scale_bench.py [--fast]
+
+Emits ``benchmarks/results/fed_scale.json`` and the committed repo-root
+``BENCH_fed.json`` (validated by ``check_regression.py``).
+"""
+from __future__ import annotations
+
+import pathlib
+import resource
+import sys
+import time
+from typing import Dict, List
+
+if __package__ in (None, ""):  # run as a script: wire repo root + src
+    _root = pathlib.Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(_root / "src"))
+    sys.path.insert(0, str(_root))
+
+from benchmarks.common import request_host_devices, write_bench_root
+
+_DEVICES = 8
+_POPULATIONS = (8, 128, 1024)
+_ROUNDS = 3
+_LOCAL_STEPS = 2
+
+
+def _peak_rss_mb() -> float:
+    """Process peak RSS in MB (ru_maxrss is KB on Linux, bytes on macOS)."""
+    peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    if sys.platform == "darwin":
+        peak //= 1024
+    return peak / 1024.0
+
+
+def run(fast: bool = False, **_) -> List[Dict]:
+    request_host_devices(_DEVICES)
+
+    from repro.federated.trainer import FederatedConfig, run_federated
+    from repro.graphs import make_cora_like
+
+    g = make_cora_like("tiny", 0)
+    populations = _POPULATIONS[:2] if fast else _POPULATIONS
+    rounds = 2 if fast else _ROUNDS
+
+    rows: List[Dict] = []
+    for backend in ("vmap", "shard_map"):
+        for K in populations:
+            cfg = FederatedConfig(
+                method="fedgat", num_clients=K, rounds=rounds,
+                local_steps=_LOCAL_STEPS, client_fraction=1.0, seed=0,
+                max_concurrent_clients=_DEVICES,
+            )
+            t0 = time.perf_counter()
+            result = run_federated(g, cfg, backend=backend)
+            seconds = time.perf_counter() - t0
+            rows.append({
+                "backend": backend,
+                "num_clients": K,
+                "devices": _DEVICES,
+                "lanes": result["cohort"]["lanes"],
+                "cohorts_per_round": result["cohort"]["cohorts_per_round"],
+                "rounds": rounds,
+                "rounds_per_s": rounds / seconds,
+                "seconds": seconds,
+                "peak_rss_mb": _peak_rss_mb(),
+                "final_test": result["final_test"],
+            })
+            print(
+                f"{backend:>9} K={K:<5} lanes={result['cohort']['lanes']} "
+                f"cohorts/round={result['cohort']['cohorts_per_round']:<4} "
+                f"{rows[-1]['rounds_per_s']:.3f} rounds/s "
+                f"peak_rss={rows[-1]['peak_rss_mb']:.0f}MB"
+            )
+    write_bench_root("fed", rows)
+    return rows
+
+
+def derived(rows: List[Dict]) -> str:
+    top = max(rows, key=lambda r: r["num_clients"])
+    return (
+        f"K={top['num_clients']} on {top['devices']} devices "
+        f"({top['backend']}): {top['rounds_per_s']:.3f} rounds/s, "
+        f"peak_rss={top['peak_rss_mb']:.0f}MB"
+    )
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.common import save_results
+
+    ap = argparse.ArgumentParser(description="population-scale federated bench")
+    ap.add_argument("--fast", action="store_true", help="skip K=1024")
+    args = ap.parse_args()
+    out = run(fast=args.fast)
+    save_results("fed_scale", out)
+    print(derived(out))

@@ -1,4 +1,20 @@
-from repro.federated.aggregation import fedavg, fedadam_server, fedprox_grad
+from repro.federated.aggregation import (
+    RunningAggregate,
+    fedadam_server,
+    fedavg,
+    fedprox_grad,
+    running_init,
+    running_mean,
+    running_update,
+    staleness_weight,
+)
+from repro.federated.cohort import (
+    RoundPlan,
+    cohort_active,
+    cohort_lanes,
+    plan_round,
+    plan_rounds,
+)
 from repro.federated.comm import CommReport, matrix_comm_cost, vector_comm_cost
 from repro.federated.partition import (
     Partition,
@@ -6,6 +22,7 @@ from repro.federated.partition import (
     cross_client_edge_count,
     dirichlet_partition,
     l_hop_sizes,
+    stage_cohort_masks,
 )
 from repro.federated.trainer import (
     FederatedConfig,
@@ -17,9 +34,19 @@ from repro.federated.trainer import (
 from repro.privacy import PrivacyConfig
 
 __all__ = [
+    "RunningAggregate",
+    "running_init",
+    "running_mean",
+    "running_update",
+    "staleness_weight",
     "fedavg",
     "fedadam_server",
     "fedprox_grad",
+    "RoundPlan",
+    "cohort_active",
+    "cohort_lanes",
+    "plan_round",
+    "plan_rounds",
     "CommReport",
     "matrix_comm_cost",
     "vector_comm_cost",
@@ -28,6 +55,7 @@ __all__ = [
     "cross_client_edge_count",
     "dirichlet_partition",
     "l_hop_sizes",
+    "stage_cohort_masks",
     "FederatedConfig",
     "PrivacyConfig",
     "Trainer",

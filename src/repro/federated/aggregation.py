@@ -4,10 +4,20 @@ also supported, as the paper notes any FL aggregator may be plugged in).
 
 All operate on *stacked* client pytrees: every leaf has a leading client
 axis K (the layout produced by vmap/shard_map local training).
+
+Cohort streaming (federated/cohort.py) never materialises the full stacked
+axis: a round's clients arrive in device-sized cohorts, and the aggregate
+is carried as a :class:`RunningAggregate` — the weighted SUM of the client
+params plus the weight total — so round memory is O(cohort), not O(K).
+Because every client's contribution enters the sum exactly once with the
+same weight it would have had in the stacked layout, the finished running
+mean equals :func:`fedavg` of the stacked params up to float re-association
+(bitwise when the sums are exactly representable; the numerics tests pin
+both).
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +37,65 @@ def fedavg(stacked_params: PyTree, weights: jax.Array | None = None) -> PyTree:
         return jnp.tensordot(w.astype(p.dtype), p, axes=(0, 0))
 
     return jax.tree.map(leaf, stacked_params)
+
+
+class RunningAggregate(NamedTuple):
+    """Streaming weighted-mean state: Σ w_i · p_i and Σ w_i.
+
+    The cohort scheduler folds one cohort at a time into this; the stacked
+    (K, ...) client axis never exists. All three fields are jit-compatible
+    (``weight`` is a scalar array), so a cohort step can update the state
+    on-device.
+    """
+
+    sum: PyTree            # Σ w_i · p_i, same structure as one client's params
+    weight: jax.Array      # Σ w_i, scalar
+
+
+def running_init(template: PyTree) -> RunningAggregate:
+    """Zero aggregate shaped like one client's params."""
+    return RunningAggregate(
+        sum=jax.tree.map(jnp.zeros_like, template),
+        weight=jnp.zeros((), jnp.float32),
+    )
+
+
+def running_update(
+    state: RunningAggregate,
+    stacked_params: PyTree,
+    weights: jax.Array,
+    scale: jax.Array | float = 1.0,
+) -> RunningAggregate:
+    """Fold one cohort (leading axis C) in: sum += scale·Σ w_c p_c.
+
+    ``weights`` is (C,) — zero entries (padding lanes, dropped clients)
+    contribute exactly nothing. ``scale`` is the cohort-level staleness
+    weight λ in buffered mode (1 in sync mode): it multiplies the cohort's
+    params *and* its weight mass, so the finished mean is the
+    staleness-weighted weighted mean Σ λ w p / Σ λ w.
+    """
+    w = jnp.asarray(weights, jnp.float32) * jnp.asarray(scale, jnp.float32)
+
+    def leaf(acc, p):
+        return acc + jnp.tensordot(w.astype(p.dtype), p, axes=(0, 0))
+
+    return RunningAggregate(
+        sum=jax.tree.map(leaf, state.sum, stacked_params),
+        weight=state.weight + jnp.sum(w),
+    )
+
+
+def running_mean(state: RunningAggregate) -> PyTree:
+    """The finished aggregate: Σ w p / Σ w (== fedavg of the stream)."""
+    return jax.tree.map(lambda s: s / state.weight.astype(s.dtype), state.sum)
+
+
+def staleness_weight(staleness, power: float):
+    """Polynomial staleness discount λ(s) = (1 + s)^(-power) (FedAsync /
+    FedBuff style). ``power=0`` is the no-discount identity — buffered
+    aggregation with λ≡1 coincides exactly with the synchronous mean."""
+    s = jnp.asarray(staleness, jnp.float32)
+    return (1.0 + s) ** (-float(power))
 
 
 def fedprox_grad(local_params: PyTree, global_params: PyTree, grads: PyTree, mu: float) -> PyTree:

@@ -125,6 +125,45 @@ def client_train_masks(
     return np.stack([(part.owner == k) & g.train_mask for k in ids])
 
 
+def stage_cohort_masks(
+    g: Graph,
+    part: Partition,
+    client_ids: Sequence[int],
+    size: int,
+    *,
+    neighbor: bool = True,
+) -> tuple:
+    """Stack ONLY the active cohort's per-client masks — the cohort
+    scheduler's staging primitive. Returns ``(nb, tr)``:
+
+      nb — (size, N, B) per-client edge-visibility masks (``None`` when
+           ``neighbor=False``: methods whose clients all see the full
+           graph pass one shared mask instead of a stacked copy);
+      tr — (size, N) per-client training-label masks.
+
+    ``client_ids`` are the cohort's live clients (<= ``size``); the
+    remaining padding lanes repeat the first client's rows so every lane
+    computes a finite (if redundant) local update — padding is neutralised
+    by its zero aggregation weight, never by poisoning the lane's inputs.
+    Peak staging memory is O(size · N · B) regardless of K.
+    """
+    ids = list(client_ids)
+    if not 1 <= len(ids) <= size:
+        raise ValueError(
+            f"cohort has {len(ids)} clients but size {size} lanes"
+        )
+    pad = size - len(ids)
+    tr = client_train_masks(g, part, clients=ids)
+    if pad:
+        tr = np.concatenate([tr, np.repeat(tr[:1], pad, axis=0)])
+    nb = None
+    if neighbor:
+        nb = client_neighbor_masks(g, part, clients=ids)
+        if pad:
+            nb = np.concatenate([nb, np.repeat(nb[:1], pad, axis=0)])
+    return nb, tr
+
+
 def l_hop_sizes(g: Graph, part: Partition, L: int) -> np.ndarray:
     """Size of each client's L-hop neighbourhood (paper's B_L statistic)."""
     K = part.num_clients

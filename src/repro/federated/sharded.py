@@ -203,7 +203,23 @@ def _client_mask_builders(cfg: FederatedConfig, g: Graph, part: Partition):
 
 def _run_shard_map(g: Graph, cfg: FederatedConfig, mesh: Mesh | None = None) -> Dict[str, Any]:
     """FedGAT/DistGAT/FedGCN rounds with clients sharded over a mesh axis."""
+    from repro.federated.cohort import cohort_active, run_cohort_rounds
+
     K = cfg.num_clients
+
+    if cohort_active(cfg):
+        # Cohort streaming requested: the mesh covers DEVICES (lanes), not
+        # clients, and cohorts of clients stream through it (cohort.py).
+        return run_cohort_rounds(g, cfg, backend="shard_map", mesh=mesh)
+    if (
+        cfg.rounds > 0
+        and mesh is None
+        and jax.process_count() <= 1
+        and len(jax.devices()) < K
+    ):
+        # More clients than devices: the one-client-per-shard layout cannot
+        # exist, so stream device-sized cohorts instead of failing.
+        return run_cohort_rounds(g, cfg, backend="shard_map")
 
     t0 = time.time()
     key = jax.random.PRNGKey(cfg.seed)

@@ -26,6 +26,7 @@ Supported methods:
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -82,6 +83,12 @@ class FederatedConfig:
     model: FedGATConfig = field(default_factory=FedGATConfig)
     gcn_hidden: int = 16
     privacy: PrivacyConfig = field(default_factory=PrivacyConfig)
+    # Cohort streaming (federated/cohort.py): decouple clients from devices.
+    max_concurrent_clients: Optional[int] = None   # cohort size cap (None = one lane per client)
+    aggregation_mode: str = "sync"    # sync | buffered (staleness-weighted)
+    staleness_power: float = 0.5      # buffered: λ(s) = (1 + s)^(-power)
+    churn_drop_rate: float = 0.0      # buffered: P(selected client drops mid-round)
+    churn_join_rate: float = 0.0      # buffered: P(unselected client joins mid-round)
 
 
 # ---------------------------------------------------------------------------
@@ -212,8 +219,17 @@ def make_local_update(loss_fn: Callable, cfg: FederatedConfig) -> Callable:
 
 
 def num_selected(cfg: FederatedConfig) -> int:
-    """Participants per round under Algorithm 2's CS(t) (>= 1)."""
-    return max(1, int(round(cfg.client_fraction * cfg.num_clients)))
+    """Participants per round under Algorithm 2's CS(t), in [1, K].
+
+    Half-up rounding (floor(x + 0.5)), NOT Python's banker's rounding:
+    ``round`` resolves .5 boundaries to the even neighbour, so
+    client_fraction=0.5 with K=5 silently trained 2 clients instead of 3
+    and n_sel jumped non-monotonically along fraction sweeps. Half-up is
+    monotone in the fraction, and the result is clamped to K so a fraction
+    marginally above 1.0 cannot schedule a phantom client.
+    """
+    n = int(math.floor(cfg.client_fraction * cfg.num_clients + 0.5))
+    return min(cfg.num_clients, max(1, n))
 
 
 def selection_schedule(cfg: FederatedConfig) -> Tuple[np.ndarray, np.ndarray]:
@@ -285,8 +301,14 @@ def build_result(
     g: Graph,
     seconds: float,
     mesh=None,
+    cohort: Optional[Dict[str, Any]] = None,
 ) -> Dict[str, Any]:
-    """The one result schema both backends return."""
+    """The one result schema both backends return.
+
+    ``cohort`` is the cohort scheduler's report (mode, lanes, churn
+    accounting) when the run was cohort-streamed, else None — the key is
+    present either way so the schema never varies across paths.
+    """
     best_val, best_test = best_metrics(val_curve, test_curve)
     privacy = privacy_report(
         cfg.privacy, rounds=cfg.rounds, num_clients=cfg.num_clients,
@@ -304,6 +326,7 @@ def build_result(
         "seconds": seconds,
         "backend": cfg.backend,
         "mesh": mesh_description(mesh),
+        "cohort": cohort,
         "epsilon": privacy["epsilon"],
         "privacy": privacy,
     }
@@ -317,10 +340,47 @@ class Trainer:
     """Unified federated trainer; backend selected by ``cfg.backend``."""
 
     def __init__(self, cfg: FederatedConfig):
+        from repro.federated.cohort import AGGREGATION_MODES
+
         if cfg.backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {cfg.backend!r}: supported backends are {list(BACKENDS)}"
             )
+        if not 0.0 < cfg.client_fraction <= 1.0:
+            raise ValueError(
+                f"client_fraction={cfg.client_fraction} must be in (0, 1]"
+            )
+        if cfg.aggregation_mode not in AGGREGATION_MODES:
+            raise ValueError(
+                f"unknown aggregation_mode {cfg.aggregation_mode!r}: "
+                f"supported modes are {list(AGGREGATION_MODES)}"
+            )
+        if cfg.max_concurrent_clients is not None:
+            if cfg.max_concurrent_clients < 1:
+                raise ValueError(
+                    f"max_concurrent_clients={cfg.max_concurrent_clients} must be >= 1"
+                )
+            if cfg.max_concurrent_clients > cfg.num_clients:
+                raise ValueError(
+                    f"max_concurrent_clients={cfg.max_concurrent_clients} exceeds "
+                    f"num_clients={cfg.num_clients}: a cohort cannot be larger "
+                    "than the client population"
+                )
+        if not 0.0 <= cfg.churn_drop_rate < 1.0 or not 0.0 <= cfg.churn_join_rate < 1.0:
+            raise ValueError("churn rates must be in [0, 1)")
+        if (cfg.churn_drop_rate > 0 or cfg.churn_join_rate > 0):
+            if cfg.aggregation_mode != "buffered":
+                raise ValueError(
+                    "mid-round churn (churn_drop_rate / churn_join_rate) "
+                    "requires aggregation_mode='buffered'"
+                )
+            if cfg.privacy.noise_multiplier > 0:
+                raise ValueError(
+                    "mid-round churn with DP noise is not supported: the "
+                    "noise std and the RDP accountant are calibrated to the "
+                    "CS(t) participant count, which churn perturbs — disable "
+                    "churn or set noise_multiplier=0"
+                )
         cfg.privacy.validate()
         if cfg.privacy.pack_noise_multiplier > 0 and not pack_released(cfg):
             raise ValueError(
@@ -346,6 +406,12 @@ class Trainer:
     def _run_vmap(self, g: Graph) -> Dict[str, Any]:
         """Paper Algorithm 2: rounds of local training + aggregation."""
         cfg = self.cfg
+        from repro.federated.cohort import cohort_active, run_cohort_rounds
+
+        if cohort_active(cfg):
+            # Cohort streaming: same schedule, same privacy streams, lanes
+            # bounded by max_concurrent_clients instead of n_sel.
+            return run_cohort_rounds(g, cfg, backend="vmap")
         key = jax.random.PRNGKey(cfg.seed)
         k_pack, k_init = jax.random.split(key)
 

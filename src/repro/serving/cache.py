@@ -12,11 +12,17 @@ pack stays servable under the fingerprint of the graph it was patched to.
 from __future__ import annotations
 
 import hashlib
+import importlib
+import json
+import os
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, Hashable, Optional
 
 import numpy as np
+
+_INDEX_NAME = "cache_index.json"
+_FORMAT_VERSION = 1
 
 
 def graph_fingerprint(*arrays: Any, extra: tuple = ()) -> str:
@@ -138,3 +144,101 @@ class PackCache:
             "refreshes": self.refreshes,
             "evictions": self.evictions,
         }
+
+    # -- persistence --------------------------------------------------------
+    #
+    # A cache directory holds one JSON index (entry metadata + counters, in
+    # LRU order) plus one .npz per pack payload. Payloads are validated by a
+    # content digest on load, and every entry keeps its *graph* fingerprint,
+    # so a reloaded entry serves if and only if the original would have: a
+    # server restarted against a changed graph takes ordinary misses.
+
+    def save(self, directory: str) -> Dict[str, Any]:
+        """Persist entries + counters to ``directory`` (created if absent).
+
+        Pack payloads must be NamedTuples of arrays (every registered
+        pack-building engine's payload is) or None; clients must be
+        JSON-representable keys (ints in practice).
+        """
+        os.makedirs(directory, exist_ok=True)
+        entries = []
+        for i, (client, e) in enumerate(self._entries.items()):
+            payload = None
+            if e.pack is not None:
+                fields = list(type(e.pack)._fields)
+                arrays = {f: np.asarray(getattr(e.pack, f)) for f in fields}
+                fname = f"pack_{i:05d}.npz"
+                np.savez(os.path.join(directory, fname), **arrays)
+                payload = {
+                    "type": f"{type(e.pack).__module__}:{type(e.pack).__qualname__}",
+                    "file": fname,
+                    "fields": fields,
+                    "digest": graph_fingerprint(*(arrays[f] for f in fields)),
+                }
+            entries.append({
+                "client": client,
+                "fingerprint": e.fingerprint,
+                "patched": e.patched,
+                "builds": e.builds,
+                "meta": e.meta,
+                "payload": payload,
+            })
+        index = {
+            "version": _FORMAT_VERSION,
+            "capacity": self.capacity,
+            "counters": {
+                "hits": self.hits, "misses": self.misses,
+                "patches": self.patches, "refreshes": self.refreshes,
+                "evictions": self.evictions,
+            },
+            "entries": entries,
+        }
+        with open(os.path.join(directory, _INDEX_NAME), "w") as f:
+            json.dump(index, f, indent=1)
+        return index
+
+    @classmethod
+    def load(cls, directory: str) -> "PackCache":
+        """Rebuild a cache saved by :meth:`save`.
+
+        Every payload's content digest is recomputed and checked — a
+        corrupted or tampered .npz raises instead of silently serving a
+        wrong pack. Entry order (LRU) and counters survive the round-trip.
+        """
+        with open(os.path.join(directory, _INDEX_NAME)) as f:
+            index = json.load(f)
+        if index.get("version") != _FORMAT_VERSION:
+            raise ValueError(
+                f"unsupported cache format version {index.get('version')!r} "
+                f"(this build reads version {_FORMAT_VERSION})"
+            )
+        cache = cls(capacity=index.get("capacity"))
+        for rec in index["entries"]:
+            pack = None
+            payload = rec.get("payload")
+            if payload is not None:
+                with np.load(os.path.join(directory, payload["file"])) as z:
+                    arrays = {f: z[f] for f in payload["fields"]}
+                digest = graph_fingerprint(
+                    *(arrays[f] for f in payload["fields"])
+                )
+                if digest != payload["digest"]:
+                    raise ValueError(
+                        f"pack payload {payload['file']!r} failed its content "
+                        f"digest check (stored {payload['digest'][:12]}..., "
+                        f"recomputed {digest[:12]}...) — refusing to load a "
+                        "corrupted pack"
+                    )
+                mod_name, _, qual = payload["type"].partition(":")
+                obj: Any = importlib.import_module(mod_name)
+                for part in qual.split("."):
+                    obj = getattr(obj, part)
+                pack = obj(**arrays)
+            cache._entries[rec["client"]] = PackEntry(
+                pack=pack, fingerprint=rec["fingerprint"],
+                patched=rec["patched"], builds=rec["builds"],
+                meta=dict(rec.get("meta") or {}),
+            )
+        for name, value in index.get("counters", {}).items():
+            setattr(cache, name, int(value))
+        return cache

@@ -11,6 +11,7 @@ refresh fires only when the bound is crossed.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
@@ -114,6 +115,7 @@ class GraphInferenceServer:
         pack_key: Optional[Array] = None,
         refresh_threshold: float = 2.0,
         cache: Optional[PackCache] = None,
+        cache_dir: Optional[str] = None,
         privacy: Any = None,
         meta: Optional[Dict[str, Any]] = None,
     ):
@@ -153,7 +155,19 @@ class GraphInferenceServer:
             pack_key if pack_key is not None else jax.random.PRNGKey(0)
         )
         self.refresh_threshold = float(refresh_threshold)
-        self.cache = cache if cache is not None else PackCache()
+        # cache_dir makes the pack cache survive server restarts: a saved
+        # cache there is reloaded (fingerprint-validated), and save_cache()
+        # writes back to the same place. Entries reloaded against a changed
+        # graph/engine simply miss — the fingerprint is the validity proof.
+        self.cache_dir = cache_dir
+        if cache is not None:
+            self.cache = cache
+        elif cache_dir is not None and os.path.exists(
+            os.path.join(cache_dir, "cache_index.json")
+        ):
+            self.cache = PackCache.load(cache_dir)
+        else:
+            self.cache = PackCache()
         self.privacy = privacy
         self.meta = dict(meta or {})
         self._clients: Dict[int, ClientState] = {}
@@ -406,6 +420,20 @@ class GraphInferenceServer:
                     logits=row, label=int(np.argmax(row)),
                 )
         return out  # type: ignore[return-value]
+
+    # -- persistence --------------------------------------------------------
+
+    def save_cache(self, directory: Optional[str] = None) -> Dict[str, Any]:
+        """Persist the pack cache (entries + counters) so a restarted server
+        warm-starts instead of re-precomputing every pack. Writes to
+        ``directory`` or the ``cache_dir`` the server was built with."""
+        target = directory or self.cache_dir
+        if target is None:
+            raise ValueError(
+                "no cache directory: pass save_cache(directory=...) or "
+                "construct the server with cache_dir="
+            )
+        return self.cache.save(target)
 
     # -- reporting ----------------------------------------------------------
 

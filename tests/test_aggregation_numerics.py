@@ -1,14 +1,29 @@
 """Aggregation numerics (ISSUE 2): weighted FedAvg and server-side FedAdam
 are the two places subsampled rounds can silently go wrong — zero-weight
 clients must be EXACT no-ops, weighted means must match hand-computed
-values, and the server Adam step must bias-correct at step 1."""
+values, and the server Adam step must bias-correct at step 1.
+
+Streaming aggregation (ISSUE 8): the cohort scheduler replaces the stacked
+(K, ...) mean with a RunningAggregate folded cohort by cohort — the tests
+below pin that the running mean equals the stacked fedavg (bitwise on
+exactly-representable sums, <= 1e-6 on random floats), that FedAdam fed the
+running mean bias-corrects identically, and that pairwise secure-agg masks
+still cancel when the sum is accumulated across a cohort boundary."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.federated import fedavg, fedadam_server
-from repro.federated.aggregation import fedadam_update
+from repro.federated.aggregation import (
+    fedadam_update,
+    running_init,
+    running_mean,
+    running_update,
+    staleness_weight,
+)
 from repro.optim.adamw import adam_init
+from repro.privacy import add_client_mask, mask_base_key
 
 
 def stacked(*rows):
@@ -100,3 +115,120 @@ def test_fedadam_server_is_update_on_the_mean():
     n2, st2 = fedadam_update(glob, fedavg(s), adam_init(glob), server_lr=0.2)
     np.testing.assert_array_equal(np.asarray(n1["w"]), np.asarray(n2["w"]))
     np.testing.assert_array_equal(np.asarray(st1.nu["w"]), np.asarray(st2.nu["w"]))
+
+
+# ---------------------------------------------------------------------------
+# RunningAggregate: streaming weighted fedavg across cohort splits
+# ---------------------------------------------------------------------------
+
+def _split(arr, sizes):
+    out, start = [], 0
+    for s in sizes:
+        out.append(arr[start : start + s])
+        start += s
+    return out
+
+
+def test_running_mean_bitwise_on_exact_sums():
+    """Integer-valued float32 params: every partial sum is exactly
+    representable, so any cohort split gives the BITWISE stacked mean."""
+    params = stacked([2.0, 8.0], [4.0, 16.0], [6.0, 24.0], [8.0, 32.0])
+    w = jnp.ones(4)
+    want = np.asarray(fedavg(params, weights=w)["w"])
+    for sizes in ((4,), (2, 2), (1, 3), (1, 1, 1, 1)):
+        agg = running_init({"w": jnp.zeros(2)})
+        for rows, ws in zip(
+            _split(params["w"], sizes), _split(w, sizes)
+        ):
+            agg = running_update(agg, {"w": rows}, ws)
+        got = np.asarray(running_mean(agg)["w"])
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("sizes", [(5,), (2, 3), (3, 1, 1), (1,) * 5])
+def test_running_mean_matches_stacked_fedavg_random(sizes):
+    rng = np.random.default_rng(0)
+    p = jnp.asarray(rng.normal(size=(5, 7)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.5, 2.0, size=5).astype(np.float32))
+    want = np.asarray(fedavg({"w": p}, weights=w)["w"])
+    agg = running_init({"w": jnp.zeros(7)})
+    for rows, ws in zip(_split(p, sizes), _split(w, sizes)):
+        agg = running_update(agg, {"w": rows}, ws)
+    np.testing.assert_allclose(
+        np.asarray(running_mean(agg)["w"]), want, atol=1e-6
+    )
+
+
+def test_running_update_zero_weight_lane_is_exact_noop():
+    """Padding lanes carry weight 0: their params never reach the sum, even
+    when the lane's values are garbage."""
+    agg0 = running_init({"w": jnp.zeros(2)})
+    with_pad = running_update(
+        agg0, stacked([1.0, 2.0], [9e9, -9e9]), jnp.asarray([1.0, 0.0])
+    )
+    without = running_update(agg0, stacked([1.0, 2.0]), jnp.asarray([1.0]))
+    np.testing.assert_array_equal(
+        np.asarray(with_pad.sum["w"]), np.asarray(without.sum["w"])
+    )
+    assert float(with_pad.weight) == float(without.weight)
+
+
+def test_fedadam_on_running_mean_matches_stacked_server():
+    """FedAdam fed the streaming mean == fedadam_server fed the stack —
+    step-1 bias correction and all."""
+    glob = {"w": jnp.asarray([1.0, -1.0, 2.0])}
+    params = stacked([0.0, 1.0, 4.0], [2.0, -3.0, 0.0], [4.0, 2.0, 2.0])
+    w = jnp.ones(3)
+    n_stacked, st_stacked = fedadam_server(
+        glob, params, adam_init(glob), server_lr=0.1, weights=w
+    )
+    agg = running_init({"w": jnp.zeros(3)})
+    agg = running_update(agg, {"w": params["w"][:2]}, w[:2])
+    agg = running_update(agg, {"w": params["w"][2:]}, w[2:])
+    n_run, st_run = fedadam_update(
+        glob, running_mean(agg), adam_init(glob), server_lr=0.1
+    )
+    np.testing.assert_allclose(
+        np.asarray(n_stacked["w"]), np.asarray(n_run["w"]), atol=1e-7
+    )
+    assert int(st_stacked.step) == int(st_run.step) == 1
+    np.testing.assert_allclose(
+        np.asarray(st_stacked.nu["w"]), np.asarray(st_run.nu["w"]), atol=1e-7
+    )
+
+
+def test_secure_agg_masks_cancel_across_cohort_boundary():
+    """Pairwise masks are keyed on GLOBAL client ids and the round's
+    participation row — summing masked updates in two cohort chunks
+    telescopes to the same total as the unmasked sum."""
+    base = mask_base_key(0)
+    K = 6
+    sel = jnp.asarray(np.ones(K, np.float32))
+    t = jnp.asarray(0, jnp.int32)
+    rng = np.random.default_rng(1)
+    params = [
+        {"w": jnp.asarray(rng.normal(size=4).astype(np.float32))}
+        for _ in range(K)
+    ]
+    masked = [
+        add_client_mask(base, t, jnp.asarray(c), sel, params[c], 1.0)
+        for c in range(K)
+    ]
+    plain_sum = np.sum([np.asarray(p["w"]) for p in params], axis=0)
+    # fold in two cohorts of 3 — the boundary must be invisible
+    agg = running_init({"w": jnp.zeros(4)})
+    for chunk in (masked[:3], masked[3:]):
+        rows = jnp.stack([m["w"] for m in chunk])
+        agg = running_update(agg, {"w": rows}, jnp.ones(len(chunk)))
+    np.testing.assert_allclose(np.asarray(agg.sum["w"]), plain_sum, atol=1e-4)
+
+
+def test_staleness_weight_properties():
+    # power=0 -> no discount: buffered mode degenerates to sync exactly
+    np.testing.assert_array_equal(
+        np.asarray(staleness_weight(jnp.arange(4), 0.0)), np.ones(4)
+    )
+    lam = np.asarray(staleness_weight(jnp.arange(4), 0.5))
+    assert lam[0] == 1.0
+    assert np.all(np.diff(lam) < 0)          # strictly decreasing in staleness
+    np.testing.assert_allclose(lam[3], 0.5)  # (1+3)^-0.5

@@ -1,0 +1,280 @@
+"""Cohort-streaming rounds (federated/cohort.py): clients decoupled from
+devices.
+
+The load-bearing claims:
+  * sync cohort streaming is in metric lockstep (<= 1e-6) with the legacy
+    one-lane-per-client paths — any cohort split, both backends, with and
+    without the privacy stack (DP noise keys and secure-agg masks are keyed
+    on global client ids, so cohort boundaries must be invisible);
+  * K larger than the device count trains (the ROADMAP cap this removes);
+  * buffered mode with staleness_power=0 coincides with sync exactly, and
+    with churn enabled the round still aggregates only actual participants;
+  * the planner's cohort algebra (padding, weights, participation row) is
+    exactly CS(t).
+
+Device-hungry legs run in a subprocess (forced host device count must be
+set before jax initialises); planner/vmap legs run in-process.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.federated import FederatedConfig, PrivacyConfig, Trainer, run_federated
+from repro.federated.cohort import (
+    cohort_active,
+    cohort_lanes,
+    plan_round,
+    plan_rounds,
+)
+from repro.federated.trainer import num_selected, selection_schedule
+from repro.graphs import make_cora_like
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return make_cora_like("tiny", 0)
+
+
+# ---------------------------------------------------------------------------
+# Planner algebra (host-side, no devices)
+# ---------------------------------------------------------------------------
+
+def test_plan_round_pads_with_out_of_range_id():
+    cfg = FederatedConfig(num_clients=10, client_fraction=0.5)
+    chosen = np.asarray([7, 2, 9, 0, 4], np.int32)
+    plan = plan_round(cfg, chosen, lanes=2, rng=None)
+    assert plan.ids.shape == (3, 2)
+    # padding lane: id == K (dropped by scatter, clipped by gather), weight 0
+    assert plan.ids[2, 1] == 10 and plan.weights[2, 1] == 0.0
+    live = plan.ids[plan.weights > 0]
+    assert sorted(live.tolist()) == sorted(chosen.tolist())
+    np.testing.assert_array_equal(np.nonzero(plan.sel_row)[0], np.sort(chosen))
+    np.testing.assert_array_equal(plan.staleness, np.ones(3))  # sync: λ ≡ 1
+
+
+def test_plan_rounds_covers_schedule_exactly():
+    cfg = FederatedConfig(num_clients=8, rounds=6, client_fraction=0.5, seed=3)
+    _, chosen = selection_schedule(cfg)
+    plans = plan_rounds(cfg, chosen, lanes=3)
+    assert len(plans) == 6
+    for t, plan in enumerate(plans):
+        live = plan.ids[plan.weights > 0]
+        assert sorted(live.tolist()) == sorted(chosen[t].tolist())
+        assert plan.joined == 0 and plan.dropped == 0
+
+
+def test_buffered_staleness_discounts_later_cohorts():
+    cfg = FederatedConfig(
+        num_clients=9, client_fraction=1.0, aggregation_mode="buffered",
+        staleness_power=0.5, max_concurrent_clients=3,
+    )
+    plan = plan_round(cfg, np.arange(9, dtype=np.int32), lanes=3, rng=None)
+    np.testing.assert_allclose(
+        plan.staleness, (1.0 + np.arange(3)) ** -0.5, rtol=1e-6
+    )
+
+
+def test_buffered_churn_tracks_actual_participation():
+    cfg = FederatedConfig(
+        num_clients=20, client_fraction=0.5, aggregation_mode="buffered",
+        churn_drop_rate=0.4, churn_join_rate=0.3, rounds=4, seed=0,
+    )
+    _, chosen = selection_schedule(cfg)
+    plans = plan_rounds(cfg, chosen, lanes=4)
+    churned = sum(p.joined + p.dropped for p in plans)
+    assert churned > 0  # the knobs actually perturb participation
+    for t, plan in enumerate(plans):
+        live = set(plan.ids[plan.weights > 0].tolist())
+        assert live == set(np.nonzero(plan.sel_row)[0].tolist())
+        assert len(live) >= 1  # a round never goes empty
+        sel_set = set(chosen[t].tolist())
+        dropped = sel_set - live
+        joined = live - sel_set
+        assert len(dropped) == plan.dropped and len(joined) == plan.joined
+
+
+def test_cohort_activation_and_lanes():
+    assert not cohort_active(FederatedConfig())
+    assert cohort_active(FederatedConfig(max_concurrent_clients=4))
+    assert cohort_active(FederatedConfig(aggregation_mode="buffered"))
+    cfg = FederatedConfig(num_clients=10, client_fraction=0.5,
+                          max_concurrent_clients=8)
+    # a cohort never needs more lanes than the round has participants
+    assert cohort_lanes(cfg, "vmap") == num_selected(cfg) == 5
+    assert cohort_lanes(FederatedConfig(num_clients=10,
+                                        max_concurrent_clients=3), "vmap") == 3
+
+
+# ---------------------------------------------------------------------------
+# Config validation (the satellite edge cases)
+# ---------------------------------------------------------------------------
+
+def test_rejects_oversized_cohort():
+    with pytest.raises(ValueError, match="exceeds"):
+        Trainer(FederatedConfig(num_clients=4, max_concurrent_clients=5))
+
+
+def test_rejects_bad_cohort_and_mode_configs():
+    with pytest.raises(ValueError, match=">= 1"):
+        Trainer(FederatedConfig(max_concurrent_clients=0))
+    with pytest.raises(ValueError, match="aggregation_mode"):
+        Trainer(FederatedConfig(aggregation_mode="async"))
+    with pytest.raises(ValueError, match="client_fraction"):
+        Trainer(FederatedConfig(client_fraction=0.0))
+    with pytest.raises(ValueError, match="client_fraction"):
+        Trainer(FederatedConfig(client_fraction=1.5))
+    with pytest.raises(ValueError, match="buffered"):
+        Trainer(FederatedConfig(churn_drop_rate=0.1))
+    with pytest.raises(ValueError, match="churn"):
+        Trainer(FederatedConfig(
+            aggregation_mode="buffered", churn_drop_rate=0.1,
+            privacy=PrivacyConfig(noise_multiplier=1.0, clip=1.0),
+        ))
+
+
+def test_k_equals_one_trains():
+    g = make_cora_like("tiny", 0)
+    cfg = FederatedConfig(method="fedgat", num_clients=1, rounds=2,
+                          local_steps=1, max_concurrent_clients=1)
+    r = run_federated(g, cfg)
+    assert len(r["val_curve"]) == 2 and r["cohort"]["lanes"] == 1
+
+
+# ---------------------------------------------------------------------------
+# vmap backend: cohort streaming is in metric lockstep with legacy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("agg", ["fedavg", "fedprox", "fedadam"])
+@pytest.mark.parametrize("lanes", [1, 2, 3])
+def test_vmap_cohort_lockstep_with_legacy(graph, agg, lanes):
+    base = dict(method="fedgat", num_clients=6, rounds=3, local_steps=2,
+                aggregator=agg, client_fraction=0.5, seed=0)
+    r_legacy = run_federated(graph, FederatedConfig(**base))
+    r_cohort = run_federated(
+        graph, FederatedConfig(**base, max_concurrent_clients=lanes)
+    )
+    np.testing.assert_allclose(
+        r_legacy["val_curve"], r_cohort["val_curve"], atol=1e-6
+    )
+    np.testing.assert_allclose(
+        r_legacy["test_curve"], r_cohort["test_curve"], atol=1e-6
+    )
+    assert r_legacy["cohort"] is None
+    assert r_cohort["cohort"]["lanes"] == lanes
+    assert set(r_legacy) == set(r_cohort)
+
+
+def test_vmap_cohort_lockstep_with_privacy_stack(graph):
+    priv = PrivacyConfig(noise_multiplier=0.8, clip=1.0, secure_agg=True)
+    base = dict(method="fedgat", num_clients=8, rounds=2, local_steps=2,
+                client_fraction=0.5, seed=0, privacy=priv)
+    r_legacy = run_federated(graph, FederatedConfig(**base))
+    r_cohort = run_federated(
+        graph, FederatedConfig(**base, max_concurrent_clients=3)
+    )
+    # Same DP noise keys, same pairwise masks — metric lockstep AND equal ε.
+    np.testing.assert_allclose(
+        r_legacy["val_curve"], r_cohort["val_curve"], atol=1e-6
+    )
+    assert r_legacy["epsilon"] == r_cohort["epsilon"]
+    assert np.isfinite(r_cohort["epsilon"])
+
+
+def test_buffered_power_zero_equals_sync(graph):
+    base = dict(method="fedgat", num_clients=6, rounds=3, local_steps=2,
+                client_fraction=0.75, seed=0, max_concurrent_clients=2)
+    r_sync = run_federated(graph, FederatedConfig(**base))
+    r_buf = run_federated(graph, FederatedConfig(
+        **base, aggregation_mode="buffered", staleness_power=0.0
+    ))
+    assert r_sync["val_curve"] == r_buf["val_curve"]
+    assert r_sync["test_curve"] == r_buf["test_curve"]
+
+
+def test_buffered_with_churn_trains(graph):
+    cfg = FederatedConfig(
+        method="fedgat", num_clients=8, rounds=3, local_steps=2,
+        client_fraction=0.75, seed=0, max_concurrent_clients=2,
+        aggregation_mode="buffered", staleness_power=0.5,
+        churn_drop_rate=0.3, churn_join_rate=0.2,
+    )
+    r = run_federated(graph, cfg)
+    assert all(np.isfinite(r["val_curve"]))
+    assert r["cohort"]["mode"] == "buffered"
+    assert r["cohort"]["joined"] + r["cohort"]["dropped"] > 0
+
+
+def test_distgat_and_fedgcn_cohort_paths(graph):
+    for method in ("distgat", "fedgcn"):
+        base = dict(method=method, num_clients=6, rounds=2, local_steps=1,
+                    client_fraction=0.5, seed=0)
+        r1 = run_federated(graph, FederatedConfig(**base))
+        r2 = run_federated(
+            graph, FederatedConfig(**base, max_concurrent_clients=2)
+        )
+        np.testing.assert_allclose(
+            r1["val_curve"], r2["val_curve"], atol=1e-6, err_msg=method
+        )
+
+
+# ---------------------------------------------------------------------------
+# shard_map backend (subprocess: forced device count precedes jax init)
+# ---------------------------------------------------------------------------
+
+_SHARD_SCRIPT = r"""
+import numpy as np, jax
+from repro.core import FedGATConfig
+from repro.federated import FederatedConfig, PrivacyConfig, run_federated
+
+assert len(jax.devices()) == 4, jax.devices()
+g = __import__('repro.graphs', fromlist=['make_cora_like']).make_cora_like('tiny', 0)
+
+# K=12 clients on 4 devices: impossible for the legacy one-client-per-shard
+# layout. Cohort shard_map must match legacy vmap at 1e-6, privacy included.
+priv = PrivacyConfig(noise_multiplier=0.6, clip=1.0, secure_agg=True)
+base = dict(method='fedgat', num_clients=12, rounds=2, local_steps=2,
+            client_fraction=0.5, seed=0, privacy=priv,
+            model=FedGATConfig(engine='direct', degree=8))
+r_vmap = run_federated(g, FederatedConfig(**base))
+r_shard = run_federated(g, FederatedConfig(**base, max_concurrent_clients=4),
+                        backend='shard_map')
+np.testing.assert_allclose(r_vmap['val_curve'], r_shard['val_curve'], atol=1e-6)
+np.testing.assert_allclose(r_vmap['test_curve'], r_shard['test_curve'], atol=1e-6)
+assert r_shard['epsilon'] == r_vmap['epsilon']
+assert set(r_vmap) == set(r_shard)
+assert r_shard['cohort']['lanes'] == 4
+assert r_shard['mesh']['axis_names'] == ['lanes']
+
+# Auto-streaming: K > devices with no explicit knob falls into cohorts
+# instead of the legacy 'need >= K devices' failure.
+r_auto = run_federated(g, FederatedConfig(**base), backend='shard_map')
+np.testing.assert_allclose(r_vmap['val_curve'], r_auto['val_curve'], atol=1e-6)
+assert r_auto['cohort']['lanes'] == 4
+
+# vmap and shard_map cohort paths agree with each other too.
+r_cv = run_federated(g, FederatedConfig(**base, max_concurrent_clients=4))
+np.testing.assert_allclose(r_cv['val_curve'], r_shard['val_curve'], atol=1e-6)
+
+# fedadam + cohort shard_map keeps lockstep.
+base2 = dict(base, aggregator='fedadam', privacy=PrivacyConfig())
+r1 = run_federated(g, FederatedConfig(**base2))
+r2 = run_federated(g, FederatedConfig(**base2, max_concurrent_clients=3),
+                   backend='shard_map')
+np.testing.assert_allclose(r1['val_curve'], r2['val_curve'], atol=1e-6)
+print('COHORT_SHARD_OK')
+"""
+
+
+def test_shard_map_cohort_lockstep():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARD_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "COHORT_SHARD_OK" in out.stdout

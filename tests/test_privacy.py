@@ -419,7 +419,12 @@ def test_pack_dp_through_trainer(graph):
 
 
 def test_num_selected_matches_schedule(graph):
-    for frac, k, expect in ((1.0, 4, 4), (0.5, 4, 2), (0.1, 4, 1), (0.5, 5, 2)):
+    # Half-up rounding: (0.5, 5) -> 3, not banker's 2 — n_sel is monotone
+    # along fraction sweeps and .5 boundaries round toward participation.
+    for frac, k, expect in (
+        (1.0, 4, 4), (0.5, 4, 2), (0.1, 4, 1), (0.5, 5, 3),
+        (0.3, 10, 3), (0.7, 10, 7), (1.0, 1, 1), (0.01, 1, 1),
+    ):
         cfg = FederatedConfig(num_clients=k, client_fraction=frac)
         assert num_selected(cfg) == expect
 

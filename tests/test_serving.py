@@ -374,3 +374,93 @@ def test_check_regression_positive_keys(tmp_path):
     bad.write_text(json.dumps([{"p50_ms": 0.0, "throughput_qps": 10.0}]))
     problems = check_file(bad)
     assert len(problems) == 1 and "p50_ms" in problems[0]
+
+
+# ---------------------------------------------------------------------------
+# PackCache persistence (survives server restarts)
+# ---------------------------------------------------------------------------
+
+def _make_server(g, cache_dir=None, num_clients=3, engine="matrix"):
+    cfg = FedGATConfig(engine=engine)
+    net = FedGAT(cfg)
+    net.precommunicate(jax.random.PRNGKey(0), g)
+    params = net.init(jax.random.PRNGKey(1), g)
+    return GraphInferenceServer(
+        params, cfg, g, num_clients=num_clients, cache_dir=cache_dir
+    )
+
+
+def test_pack_cache_save_load_round_trip(tiny, tmp_path):
+    cache = PackCache(capacity=8)
+    s1 = _make_server(tiny)
+    s1.cache = cache
+    r1 = s1.serve_batch([Query(0, 3), Query(1, 4), Query(2, 5)])
+    saved = cache.save(str(tmp_path))
+    assert saved["version"] == 1 and len(saved["entries"]) == 3
+
+    loaded = PackCache.load(str(tmp_path))
+    # counters and entry order survive
+    assert loaded.stats() == cache.stats()
+    assert list(loaded._entries) == list(cache._entries)
+    for c in range(3):
+        a, b = cache.peek(c), loaded.peek(c)
+        assert a.fingerprint == b.fingerprint
+        assert a.patched == b.patched and a.builds == b.builds
+        for fa, fb in zip(a.pack, b.pack):
+            np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+
+def test_server_restart_warm_starts_from_cache_dir(tiny, tmp_path):
+    cdir = str(tmp_path / "cache")
+    s1 = _make_server(tiny, cache_dir=cdir)
+    r1 = s1.serve_batch([Query(0, 3), Query(1, 9)])
+    assert s1.cache.stats()["misses"] == 2
+    s1.save_cache()
+
+    # restart: packs reload, queries hit instead of rebuilding
+    s2 = _make_server(tiny, cache_dir=cdir)
+    assert len(s2.cache) == 2
+    r2 = s2.serve_batch([Query(0, 3), Query(1, 9)])
+    stats = s2.cache.stats()
+    assert stats["misses"] == 2          # persisted counter; no NEW misses
+    assert stats["hits"] >= 2
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(a.logits, b.logits)
+        assert a.label == b.label
+
+
+def test_loaded_cache_misses_on_changed_graph(tiny, tmp_path):
+    cdir = str(tmp_path / "cache")
+    s1 = _make_server(tiny, cache_dir=cdir)
+    s1.serve_batch([Query(0, 3)])
+    s1.save_cache()
+
+    # the graph the restarted server sees differs -> fingerprint mismatch
+    g2 = make_cora_like("tiny", seed=1)
+    s2 = _make_server(g2, cache_dir=cdir)
+    assert len(s2.cache) == 1
+    before = s2.cache.stats()["misses"]
+    s2.serve_batch([Query(0, 3)])
+    assert s2.cache.stats()["misses"] == before + 1
+
+
+def test_corrupted_payload_refuses_to_load(tiny, tmp_path):
+    import glob
+
+    cdir = str(tmp_path / "cache")
+    s1 = _make_server(tiny, cache_dir=cdir)
+    s1.serve_batch([Query(0, 3)])
+    s1.save_cache()
+    npz = glob.glob(str(tmp_path / "cache" / "*.npz"))[0]
+    data = {k: v for k, v in np.load(npz).items()}
+    first = next(iter(data))
+    data[first] = data[first] + 1.0
+    np.savez(npz, **data)
+    with pytest.raises(ValueError, match="digest"):
+        PackCache.load(cdir)
+
+
+def test_save_cache_requires_a_directory(tiny):
+    s = _make_server(tiny)
+    with pytest.raises(ValueError, match="cache directory"):
+        s.save_cache()
