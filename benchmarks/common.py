@@ -18,8 +18,19 @@ BACKEND_CHOICES = ("vmap", "shard_map")
 def write_bench_root(name: str, rows: List[Dict[str, Any]]) -> pathlib.Path:
     """Write ``BENCH_<name>.json`` at the repo root — the committed,
     per-run benchmark artifact (kernel_bench/serve_bench emit one on every
-    run; check_regression validates them alongside benchmarks/results)."""
+    run; check_regression validates them alongside benchmarks/results).
+
+    With telemetry enabled, the run's Chrome trace lands next to it as
+    ``BENCH_<name>_trace.json`` and every row carries a ``trace`` pointer
+    to it (check_regression skips ``*_trace.json`` — it is a trace, not a
+    row list)."""
+    from repro import telemetry
+
     path = REPO_ROOT / f"BENCH_{name}.json"
+    if telemetry.enabled():
+        trace_path = REPO_ROOT / f"BENCH_{name}_trace.json"
+        telemetry.export_chrome_trace(str(trace_path))
+        rows = [dict(r, trace=trace_path.name) for r in rows]
     path.write_text(json.dumps(rows, indent=1, default=str) + "\n")
     return path
 
@@ -90,9 +101,13 @@ def figure_cli(
             process_id, _ = initialize_worker()
         else:
             request_host_devices(max_clients(args.fast))
+    from repro import telemetry
+
     t0 = time.perf_counter()
-    rows = run(fast=args.fast, dataset=args.dataset, seed=args.seed,
-               backend=args.backend)
+    with telemetry.span("benchmark", figure=name, backend=args.backend,
+                        fast=args.fast):
+        rows = run(fast=args.fast, dataset=args.dataset, seed=args.seed,
+                   backend=args.backend)
     us = (time.perf_counter() - t0) * 1e6
     if process_id != 0:
         return  # only process 0 persists and reports

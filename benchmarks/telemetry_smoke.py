@@ -1,0 +1,117 @@
+"""Telemetry smoke: overhead gate + trace/manifest validation (CI job).
+
+Runs one fig2-style federated training config three times on the vmap
+backend — a compile warmup, a timed run with telemetry disabled, and a
+timed run with telemetry enabled — then asserts the observability
+contract end to end:
+
+* the enabled and disabled runs are **bitwise identical** (telemetry is
+  host-side instrumentation only; it must not move a single bit of the
+  training computation);
+* enabled-mode wall-time overhead is below the gate (default 5%;
+  ``REPRO_TELEMETRY_MAX_OVERHEAD`` overrides — CI runners are shared and
+  occasionally need slack);
+* the Chrome trace parses, and contains nested round -> cohort -> step
+  spans (the config sets ``max_concurrent_clients`` so the cohort path
+  runs);
+* the manifest records a nonzero jit-compile count;
+* the metrics snapshot carries comm gauges.
+
+Artifacts (trace.json / metrics.json / manifest.json / events.jsonl) are
+written to ``--out`` (default ``telemetry_run/``) for CI upload.
+
+  PYTHONPATH=src python benchmarks/telemetry_smoke.py [--out DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+import time
+
+if __package__ in (None, ""):  # run as a script: wire repo root + src
+    _root = pathlib.Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(_root / "src"))
+    sys.path.insert(0, str(_root))
+
+
+def _run_once():
+    from repro.core import FedGATConfig
+    from repro.federated import FederatedConfig, Trainer
+    from repro.graphs import make_cora_like
+
+    g = make_cora_like("cora_like", seed=0)
+    cfg = FederatedConfig(
+        method="fedgat", num_clients=10, rounds=25, local_steps=3,
+        lr=0.02, seed=0, max_concurrent_clients=4,
+        model=FedGATConfig(engine="direct", degree=16),
+    )
+    t0 = time.perf_counter()
+    res = Trainer(cfg).run(g)
+    return res, time.perf_counter() - t0, cfg
+
+
+def main(argv=None) -> int:
+    from repro import telemetry
+
+    ap = argparse.ArgumentParser(description="telemetry overhead smoke")
+    ap.add_argument("--out", default="telemetry_run",
+                    help="artifact directory (trace/metrics/manifest/events)")
+    args = ap.parse_args(argv)
+    max_overhead = float(os.environ.get("REPRO_TELEMETRY_MAX_OVERHEAD", "0.05"))
+
+    telemetry.disable()
+    _run_once()                                   # warmup: pay the compiles
+    r_off, t_off, _ = _run_once()                 # timed, disabled
+
+    telemetry.reset()
+    telemetry.enable()
+    r_on, t_on, cfg = _run_once()                 # timed, enabled
+    paths = telemetry.write_run(args.out, cfg)
+    telemetry.disable()
+
+    # -- bitwise parity ------------------------------------------------------
+    assert r_on["val_curve"] == r_off["val_curve"], "enabled run moved val_curve"
+    assert r_on["test_curve"] == r_off["test_curve"], "enabled run moved test_curve"
+    import jax
+    import numpy as np
+
+    for a, b in zip(jax.tree.leaves(r_off["params"]), jax.tree.leaves(r_on["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # -- overhead gate -------------------------------------------------------
+    overhead = (t_on - t_off) / t_off
+    print(f"telemetry_smoke: disabled {t_off:.2f}s, enabled {t_on:.2f}s, "
+          f"overhead {overhead * 100:.2f}% (gate {max_overhead * 100:.0f}%)")
+    if overhead > max_overhead:
+        print(f"FAIL telemetry overhead {overhead * 100:.2f}% exceeds "
+              f"{max_overhead * 100:.0f}% gate", file=sys.stderr)
+        return 1
+
+    # -- trace schema --------------------------------------------------------
+    trace = json.loads(open(paths["trace"]).read())
+    events = trace["traceEvents"]
+    names = {e["name"] for e in events}
+    for need in ("round", "cohort", "step", "evaluate"):
+        assert need in names, f"trace missing {need!r} spans (have {sorted(names)})"
+    cohort_parents = {e["args"].get("parent") for e in events if e["name"] == "cohort"}
+    assert cohort_parents == {"round"}, cohort_parents
+    rounds_seen = {e["args"]["round"] for e in events if e["name"] == "round"}
+    assert len(rounds_seen) == 25, f"expected 25 round spans, saw {len(rounds_seen)}"
+
+    # -- manifest + metrics --------------------------------------------------
+    manifest = json.loads(open(paths["manifest"]).read())
+    assert manifest["jit_compiles"] > 0, manifest
+    metrics = json.loads(open(paths["metrics"]).read())
+    assert "comm.upload_scalars" in metrics, sorted(metrics)
+    assert metrics["jax.jit_compiles"]["value"] > 0
+
+    print(f"telemetry_smoke: OK — {len(events)} spans, "
+          f"{manifest['jit_compiles']} compiles, artifacts in {args.out}/")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -55,6 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.core.gat import masked_accuracy
 from repro.federated.aggregation import (
     RunningAggregate,
@@ -326,6 +327,7 @@ def run_cohort_rounds(g: Graph, cfg, backend: str, mesh=None) -> Dict[str, Any]:
         build_result,
         make_local_update,
         make_loss_fn,
+        num_selected,
         selection_schedule,
     )
 
@@ -412,6 +414,10 @@ def run_cohort_rounds(g: Graph, cfg, backend: str, mesh=None) -> Dict[str, Any]:
     cohort_report["cohorts_per_round"] = max(p.ids.shape[0] for p in plans)
     cohort_report["joined"] = sum(p.joined for p in plans)
     cohort_report["dropped"] = sum(p.dropped for p in plans)
+    # Churn accounting in the process-wide registry (always on — these are
+    # the same kind of ad hoc counters the pack cache keeps).
+    telemetry.counter("federated.cohort.joined").inc(cohort_report["joined"])
+    telemetry.counter("federated.cohort.dropped").inc(cohort_report["dropped"])
 
     stager = _CohortStager(
         g, part, lanes, per_client_nb=cfg.method == "distgat",
@@ -421,6 +427,9 @@ def run_cohort_rounds(g: Graph, cfg, backend: str, mesh=None) -> Dict[str, Any]:
 
     val_curve: List[float] = []
     test_curve: List[float] = []
+    traced = telemetry.enabled()
+    priv = cfg.privacy
+    q = num_selected(cfg) / K
     for t in range(cfg.rounds):
         plan = plans[t]
         agg: Any = RunningAggregate(
@@ -429,40 +438,62 @@ def run_cohort_rounds(g: Graph, cfg, backend: str, mesh=None) -> Dict[str, Any]:
         )
         g_round = global_params          # every cohort dispatches from here
         t_arr = jnp.asarray(t, jnp.int32)
-        for c in range(plan.ids.shape[0]):
-            ids = plan.ids[c]
-            w = plan.weights[c]
-            live = ids[w > 0]
-            nb, tr = stager(live)
-            opt_slice = jax.tree.map(
-                lambda x: x[np.minimum(ids, K - 1)], opt_bank
-            )
-            agg, new_opt = step(
-                g_round, agg, opt_slice,
-                nb if nb is not None else shared_nb, tr,
-                ids, w, jnp.asarray(plan.staleness[c], jnp.float32),
-                plan.sel_row, t_arr,
-            )
-            new_opt = jax.device_get(new_opt)
-            live_lane = w > 0
+        with telemetry.span(
+            "round", round=t, backend=backend, cohorts=int(plan.ids.shape[0])
+        ):
+            for c in range(plan.ids.shape[0]):
+                ids = plan.ids[c]
+                w = plan.weights[c]
+                with telemetry.span("cohort", cohort=c, live=int((w > 0).sum())):
+                    live = ids[w > 0]
+                    with telemetry.span("staging"):
+                        nb, tr = stager(live)
+                        opt_slice = jax.tree.map(
+                            lambda x: x[np.minimum(ids, K - 1)], opt_bank
+                        )
+                    with telemetry.span("step"):
+                        agg, new_opt = step(
+                            g_round, agg, opt_slice,
+                            nb if nb is not None else shared_nb, tr,
+                            ids, w, jnp.asarray(plan.staleness[c], jnp.float32),
+                            plan.sel_row, t_arr,
+                        )
+                    with telemetry.span("host_transfer"):
+                        new_opt = jax.device_get(new_opt)
+                    live_lane = w > 0
 
-            def scatter(bank, new):
-                bank[ids[live_lane]] = new[live_lane]
-                return bank
+                    def scatter(bank, new):
+                        bank[ids[live_lane]] = new[live_lane]
+                        return bank
 
-            opt_bank = jax.tree.map(scatter, opt_bank, new_opt)
-        agg = jax.device_get(agg)
-        mean = jax.tree.map(
-            lambda s: (s / agg.weight).astype(s.dtype), agg.sum
-        )
-        if cfg.aggregator == "fedadam":
-            new_gp, server_state = server_apply(g_round, mean, server_state)
-            global_params = jax.device_get(new_gp)
-        else:
-            global_params = mean
-        va, ta = evaluate(global_params)
+                    with telemetry.span("aggregation_fold"):
+                        opt_bank = jax.tree.map(scatter, opt_bank, new_opt)
+            with telemetry.span("aggregate"):
+                agg = jax.device_get(agg)
+                mean = jax.tree.map(
+                    lambda s: (s / agg.weight).astype(s.dtype), agg.sum
+                )
+                if cfg.aggregator == "fedadam":
+                    new_gp, server_state = server_apply(g_round, mean, server_state)
+                    global_params = jax.device_get(new_gp)
+                else:
+                    global_params = mean
+            with telemetry.span("evaluate"):
+                va, ta = evaluate(global_params)
         val_curve.append(float(va))
         test_curve.append(float(ta))
+        if traced and priv.dp_enabled:
+            # Host-side ε trajectory, same as the legacy vmap loop: the
+            # accountant sees CS(t) sampling, not cohort boundaries.
+            from repro.privacy import compute_epsilon
+
+            telemetry.gauge("privacy.epsilon").set(
+                compute_epsilon(priv.noise_multiplier, t + 1, q, priv.delta)
+            )
+            telemetry.event(
+                "privacy.round", round=t,
+                epsilon=telemetry.gauge("privacy.epsilon").value,
+            )
 
     return build_result(
         cfg=cfg, params=global_params, val_curve=val_curve,

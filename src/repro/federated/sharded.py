@@ -60,6 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import telemetry
 from repro._compat.jax_compat import shard_map
 from repro.core.gat import masked_accuracy
 from repro.federated.aggregation import fedadam_update
@@ -347,9 +348,13 @@ def _run_shard_map(g: Graph, cfg: FederatedConfig, mesh: Mesh | None = None) -> 
             out_specs=(P(), P(), P()),
         )
     )
-    gp, vas, tas = fn(
-        nb_masks, tr_masks, sel_sharded, sel_full, global_params, server_state
-    )
+    # All rounds run inside ONE jitted lax.scan, so per-round spans cannot
+    # exist on this path — a single span covers the whole scan.
+    with telemetry.span("rounds_scan", rounds=cfg.rounds, backend="shard_map"):
+        gp, vas, tas = fn(
+            nb_masks, tr_masks, sel_sharded, sel_full, global_params, server_state
+        )
+        vas, tas = np.asarray(vas), np.asarray(tas)
     val_curve = [float(x) for x in np.asarray(vas)]
     test_curve = [float(x) for x in np.asarray(tas)]
     return build_result(

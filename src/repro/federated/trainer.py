@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.core.fedgat_model import FedGAT, FedGATConfig
 from repro.core.gat import masked_accuracy, masked_cross_entropy
 from repro.core.gcn import gcn_forward_nbr, init_gcn_params, normalized_nbr_coeffs
@@ -59,10 +60,14 @@ from repro.privacy import (
     pack_noise_key,
     privacy_report,
 )
+from repro.telemetry.manifest import build_manifest
 
 Array = jax.Array
 
 BACKENDS = ("vmap", "shard_map")
+
+# Count XLA compiles into the run manifest (idempotent; host-side only).
+telemetry.install_jax_hooks()
 
 
 @dataclass(frozen=True)
@@ -314,6 +319,16 @@ def build_result(
         cfg.privacy, rounds=cfg.rounds, num_clients=cfg.num_clients,
         num_selected=num_selected(cfg), pack_released=pack_released(cfg),
     )
+    comm = comm_report(cfg, g, part)
+    if telemetry.enabled():
+        telemetry.gauge("federated.rounds").set(float(cfg.rounds))
+        telemetry.gauge("federated.seconds").set(float(seconds))
+        if privacy["epsilon"] is not None:
+            telemetry.gauge("privacy.epsilon").set(float(privacy["epsilon"]))
+        if comm is not None:
+            telemetry.gauge("comm.upload_scalars").set(float(comm.upload_scalars))
+            telemetry.gauge("comm.download_scalars").set(float(comm.download_scalars))
+            telemetry.gauge("comm.cross_client_edges").set(float(comm.cross_client_edges))
     return {
         "params": params,
         "val_curve": val_curve,
@@ -321,7 +336,7 @@ def build_result(
         "best_val": best_val,
         "best_test": best_test,
         "final_test": test_curve[-1] if test_curve else 0.0,
-        "comm": comm_report(cfg, g, part),
+        "comm": comm,
         "partition": part,
         "seconds": seconds,
         "backend": cfg.backend,
@@ -329,6 +344,7 @@ def build_result(
         "cohort": cohort,
         "epsilon": privacy["epsilon"],
         "privacy": privacy,
+        "manifest": build_manifest(cfg=cfg, mesh=mesh_description(mesh)),
     }
 
 
@@ -486,16 +502,33 @@ class Trainer:
         val_curve, test_curve = [], []
         t0 = time.time()
         sel_sched, chosen_sched = selection_schedule(cfg)
+        traced = telemetry.enabled()
+        q = num_selected(cfg) / cfg.num_clients
         for t in range(cfg.rounds):
-            global_params, opt_states, server_state = round_step(
-                global_params, opt_states, server_state,
-                jnp.asarray(chosen_sched[t]),
-                jnp.asarray(sel_sched[t]),
-                jnp.asarray(t, jnp.int32),
-            )
-            va, ta = evaluate(global_params)
+            with telemetry.span("round", round=t, backend="vmap"):
+                with telemetry.span("step", selected=int(sel_sched[t].sum())):
+                    global_params, opt_states, server_state = round_step(
+                        global_params, opt_states, server_state,
+                        jnp.asarray(chosen_sched[t]),
+                        jnp.asarray(sel_sched[t]),
+                        jnp.asarray(t, jnp.int32),
+                    )
+                with telemetry.span("evaluate"):
+                    va, ta = evaluate(global_params)
             val_curve.append(float(va))
             test_curve.append(float(ta))
+            if traced and priv.dp_enabled:
+                # Host-side ε trajectory: recomputed per round from the
+                # accountant; never touches the jitted computation.
+                from repro.privacy import compute_epsilon
+
+                telemetry.gauge("privacy.epsilon").set(
+                    compute_epsilon(priv.noise_multiplier, t + 1, q, priv.delta)
+                )
+                telemetry.event(
+                    "privacy.round", round=t,
+                    epsilon=telemetry.gauge("privacy.epsilon").value,
+                )
 
         return build_result(
             cfg=cfg, params=global_params, val_curve=val_curve,

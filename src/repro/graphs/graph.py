@@ -24,13 +24,18 @@ from typing import NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
+# telemetry.metrics is pure Python (no jax import): the graph container
+# stays accelerator-free while its dense-view accounting joins the
+# process-wide metrics registry.
+from repro.telemetry.metrics import counter as _metrics_counter
+
 # --------------------------------------------------------------------------
 # Dense-view policy: the (N, N) adjacency is an escape hatch, not a format.
 # --------------------------------------------------------------------------
 
 DENSE_ADJ_DEFAULT_MAX_NODES = 8192
 
-_dense_view_count = 0
+_DENSE_VIEWS = _metrics_counter("graphs.dense_view_count")
 
 
 def dense_adj_limit() -> int:
@@ -56,13 +61,15 @@ def dense_adj_limit() -> int:
 
 def dense_view_count() -> int:
     """How many times a dense (N, N) adjacency view was materialised in this
-    process. The large-graph CI smoke asserts this stays 0 end-to-end."""
-    return _dense_view_count
+    process. The large-graph CI smoke asserts this stays 0 end-to-end.
+
+    Thin view over the ``graphs.dense_view_count`` counter in the
+    process-wide metrics registry (repro.telemetry.metrics)."""
+    return _DENSE_VIEWS.value
 
 
 def reset_dense_view_count() -> None:
-    global _dense_view_count
-    _dense_view_count = 0
+    _DENSE_VIEWS.reset()
 
 
 class DenseAdjacencyError(MemoryError):
@@ -126,7 +133,6 @@ def dense_adjacency(g: Graph) -> np.ndarray:
     This is the ONLY way a dense adjacency comes into existence post-CSR
     refactor; it exists for the exact-GAT oracle and small-graph tests.
     """
-    global _dense_view_count
     n = g.num_nodes
     limit = dense_adj_limit()
     if n > limit:
@@ -136,7 +142,7 @@ def dense_adjacency(g: Graph) -> np.ndarray:
             "stay on the CSR/neighbour-list paths (set REPRO_DENSE_ADJ_MAX "
             "to override for debugging)."
         )
-    _dense_view_count += 1
+    _DENSE_VIEWS.inc()
     a = np.zeros((n, n), dtype=bool)
     rows = np.repeat(np.arange(n, dtype=np.int64), g.degrees())
     a[rows, g.indices] = True

@@ -109,7 +109,14 @@ def run_graph(argv=None) -> None:
                     help="new nodes in the demo graph delta (0 = skip)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fast", action="store_true", help="smoke-size run")
+    ap.add_argument("--telemetry-dir", default="",
+                    help="enable repro.telemetry and write the run artifacts "
+                    "(trace.json/metrics.json/manifest.json/events.jsonl) here")
     args = ap.parse_args(argv)
+    from repro import telemetry
+
+    if args.telemetry_dir:
+        telemetry.enable(args.telemetry_dir)
     if args.fast:
         args.dataset = "tiny"
         args.clients = min(args.clients, 2)
@@ -164,7 +171,8 @@ def run_graph(argv=None) -> None:
         server.serve_batch,
         max_batch_size=args.max_batch_size, max_wait=args.max_wait,
     )
-    results = batcher.run(queries, arrivals.tolist())
+    with telemetry.span("serve_stream", queries=args.queries, qps=args.qps):
+        results = batcher.run(queries, arrivals.tolist())
     correct = sum(r.label == int(g.labels[r.node]) for r in results)
     s = batcher.stats.summary()
     print(f"served: {args.queries} queries in {int(s['batches'])} batches "
@@ -202,6 +210,10 @@ def run_graph(argv=None) -> None:
     c = st["cache"]
     print(f"cache: entries={c['entries']} hits={c['hits']} misses={c['misses']} "
           f"patches={c['patches']} refreshes={c['refreshes']}")
+    if args.telemetry_dir:
+        paths = telemetry.write_run(args.telemetry_dir)
+        print(f"telemetry: {len(telemetry.tracer.records)} spans -> "
+              f"{paths['trace']}")
 
 
 def main(argv=None) -> None:

@@ -21,8 +21,20 @@ from typing import Any, Dict, Hashable, Optional
 
 import numpy as np
 
+from repro.telemetry.metrics import counter as _metrics_counter
+
 _INDEX_NAME = "cache_index.json"
 _FORMAT_VERSION = 1
+
+# Process-wide pack-cache accounting in the telemetry registry: every
+# PackCache instance feeds these, so one metrics snapshot sees the whole
+# server's cache behaviour; the per-instance attributes below remain the
+# per-cache view (and survive save/load round-trips).
+_HITS = _metrics_counter("serving.pack_cache.hits")
+_MISSES = _metrics_counter("serving.pack_cache.misses")
+_PATCHES = _metrics_counter("serving.pack_cache.patches")
+_REFRESHES = _metrics_counter("serving.pack_cache.refreshes")
+_EVICTIONS = _metrics_counter("serving.pack_cache.evictions")
 
 
 def graph_fingerprint(*arrays: Any, extra: tuple = ()) -> str:
@@ -83,9 +95,11 @@ class PackCache:
         entry = self._entries.get(client)
         if entry is not None and entry.fingerprint == fingerprint:
             self.hits += 1
+            _HITS.inc()
             self._entries.move_to_end(client)
             return entry
         self.misses += 1
+        _MISSES.inc()
         return None
 
     def touch(self, client: Hashable) -> None:
@@ -94,6 +108,7 @@ class PackCache:
         but the pack is still what answered the query)."""
         if client in self._entries:
             self.hits += 1
+            _HITS.inc()
             self._entries.move_to_end(client)
 
     def peek(self, client: Hashable) -> Optional[PackEntry]:
@@ -107,6 +122,7 @@ class PackCache:
         while self.capacity is not None and len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
             self.evictions += 1
+            _EVICTIONS.inc()
 
     def revalidate(self, client: Hashable, fingerprint: str) -> None:
         """Re-stamp an entry for a new fingerprint without touching the
@@ -121,6 +137,7 @@ class PackCache:
         entry.fingerprint = fingerprint
         entry.patched = True
         self.patches += 1
+        _PATCHES.inc()
 
     def note_refresh(self, client: Hashable, fingerprint: str, pack: Any) -> None:
         """Record a full rebuild of the client's pack (bound crossed or
@@ -134,6 +151,7 @@ class PackCache:
         entry.patched = False
         entry.builds += 1
         self.refreshes += 1
+        _REFRESHES.inc()
 
     def stats(self) -> Dict[str, int]:
         return {

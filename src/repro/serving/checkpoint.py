@@ -25,6 +25,7 @@ import jax
 from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
 from repro.core.fedgat_model import FedGATConfig, init_params
 from repro.privacy import PrivacyConfig
+from repro.telemetry.manifest import build_manifest
 
 PARAMS_NAME = "params.npz"
 META_NAME = "meta.json"
@@ -68,6 +69,7 @@ def save_bundle(
         "step": int(step),
         "model": dataclasses.asdict(method_model_config(fed_cfg)),
         "privacy": dataclasses.asdict(fed_cfg.privacy),
+        "manifest": build_manifest(cfg=fed_cfg),
     }
     if extra:
         meta.update(extra)

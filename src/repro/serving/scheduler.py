@@ -18,15 +18,24 @@ from __future__ import annotations
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
+from repro import telemetry
+from repro.telemetry.metrics import Histogram
 
 
 class LatencyStats:
-    """Latency/throughput accumulator for served queries."""
+    """Latency/throughput accumulator for served queries.
+
+    Bounded memory under sustained traffic: per-query latencies and batch
+    sizes feed fixed-size telemetry histograms (geometric buckets, <=1%
+    quantile error — see :class:`repro.telemetry.metrics.Histogram`)
+    instead of the old unbounded Python lists, while count and mean stay
+    exact. ``summary()`` keys are unchanged, so the serving benchmarks and
+    ``check_regression``'s POSITIVE_KEYS rule see the same schema.
+    """
 
     def __init__(self) -> None:
-        self.latencies: List[float] = []        # seconds, per query
-        self.batch_sizes: List[int] = []
+        self.latency = Histogram("latency_s")        # seconds, per query
+        self.batch_size = Histogram("batch_size", lo=1.0, hi=1e6)
         self.first_arrival: Optional[float] = None
         self.last_completion: float = 0.0
 
@@ -34,19 +43,19 @@ class LatencyStats:
         self, arrivals: Sequence[float], completion: float
     ) -> None:
         for a in arrivals:
-            self.latencies.append(completion - a)
+            self.latency.observe(completion - a)
             if self.first_arrival is None or a < self.first_arrival:
                 self.first_arrival = a
-        self.batch_sizes.append(len(arrivals))
+        self.batch_size.observe(len(arrivals))
         self.last_completion = max(self.last_completion, completion)
 
     def percentile_ms(self, q: float) -> float:
-        if not self.latencies:
+        if not self.latency.count:
             return 0.0
-        return float(np.percentile(np.asarray(self.latencies), q) * 1e3)
+        return self.latency.quantile(q) * 1e3
 
     def summary(self) -> Dict[str, float]:
-        n = len(self.latencies)
+        n = self.latency.count
         span = (
             self.last_completion - self.first_arrival
             if n and self.first_arrival is not None
@@ -54,8 +63,8 @@ class LatencyStats:
         )
         return {
             "queries": float(n),
-            "batches": float(len(self.batch_sizes)),
-            "mean_batch": float(np.mean(self.batch_sizes)) if self.batch_sizes else 0.0,
+            "batches": float(self.batch_size.count),
+            "mean_batch": float(self.batch_size.mean),
             "p50_ms": self.percentile_ms(50),
             "p99_ms": self.percentile_ms(99),
             "throughput_qps": float(n / span) if span > 0 else 0.0,
@@ -97,9 +106,10 @@ class MicroBatcher:
             return
         batch, self._buf = self._buf, []
         start = max(trigger_time, self._now)
-        t0 = self.timer()
-        outputs = self.serve_fn([q for q, _, _ in batch])
-        compute = self.timer() - t0
+        with telemetry.span("serving.dispatch", batch=len(batch)):
+            t0 = self.timer()
+            outputs = self.serve_fn([q for q, _, _ in batch])
+            compute = self.timer() - t0
         completion = start + compute
         self._now = completion
         if len(outputs) != len(batch):
@@ -109,6 +119,8 @@ class MicroBatcher:
         for (_, _, seq), out in zip(batch, outputs):
             self._results[seq] = out
         self.stats.observe_batch([a for _, a, _ in batch], completion)
+        telemetry.counter("serving.dispatches").inc()
+        telemetry.histogram("serving.dispatch_compute_s").observe(compute)
 
     def run(
         self,

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.analysis.error_bounds import thm35_logit_bound
 from repro.core.engine import get_engine
 from repro.core.fedgat_model import FedGATConfig, layered_forward
@@ -258,10 +259,11 @@ class GraphInferenceServer:
         vis = self._visible_mask_np(client)
         pack = None
         if self.engine.needs_pack:
-            pack = self.engine.precompute(
-                client_pack_key(self.pack_key, client),
-                self._h, self._idx, jnp.asarray(vis),
-            )
+            with telemetry.span("serving.pack_build", client=client):
+                pack = self.engine.precompute(
+                    client_pack_key(self.pack_key, client),
+                    self._h, self._idx, jnp.asarray(vis),
+                )
         entry = PackEntry(pack=pack, fingerprint=fp)
         self.cache.put(client, entry)
         st = self._clients.setdefault(client, ClientState())
@@ -325,43 +327,47 @@ class GraphInferenceServer:
         self._set_graph(apply_delta(self.graph, delta))
         refreshed: List[int] = []
         drift: Dict[int, float] = {}
-        for client in sorted(self._clients):
-            st = self._clients[client]
-            entry = self.cache.peek(client)
-            if entry is None:                  # evicted: rebuilt on next query
-                del self._clients[client]
-                continue
-            vis = self._visible_mask_np(client)
-            if self.engine.needs_pack:
-                patch_key = jax.random.fold_in(
-                    client_pack_key(self.pack_key, client), 10_000 + self._version
-                )
-                pack = patch_pack(
-                    self.engine, patch_key, entry.pack, old_nodes,
-                    self.graph, st.b_pack,
-                    vis if self.method == "distgat" else None,
-                )
-                st.covered = extend_coverage(
-                    st.covered, self.graph, st.b_pack,
-                    vis if self.method == "distgat" else None,
-                )
-                st.eps = mass_drift(
-                    self.params[0], self.coeffs, self.cfg.basis, self.cfg.domain,
-                    self.graph, st.covered,
-                    vis if self.method == "distgat" else None,
-                )
-                st.patches += 1
-                st.history.append(st.eps)
-                self.cache.note_patch(client, self._fingerprint(client), pack)
-                drift[client] = st.eps
-                if self.drift(client)["bound"] > self.refresh_threshold:
-                    self.refresh(client)
-                    refreshed.append(client)
-            else:
-                # Pack-free engines re-read the graph arrays: exact, no drift.
-                self.cache.revalidate(client, self._fingerprint(client))
-                st.history.append(0.0)
-                drift[client] = 0.0
+        with telemetry.span(
+            "serving.apply_update",
+            new_nodes=delta.num_new_nodes, new_edges=delta.num_new_edges,
+        ):
+            for client in sorted(self._clients):
+                st = self._clients[client]
+                entry = self.cache.peek(client)
+                if entry is None:              # evicted: rebuilt on next query
+                    del self._clients[client]
+                    continue
+                vis = self._visible_mask_np(client)
+                if self.engine.needs_pack:
+                    patch_key = jax.random.fold_in(
+                        client_pack_key(self.pack_key, client), 10_000 + self._version
+                    )
+                    pack = patch_pack(
+                        self.engine, patch_key, entry.pack, old_nodes,
+                        self.graph, st.b_pack,
+                        vis if self.method == "distgat" else None,
+                    )
+                    st.covered = extend_coverage(
+                        st.covered, self.graph, st.b_pack,
+                        vis if self.method == "distgat" else None,
+                    )
+                    st.eps = mass_drift(
+                        self.params[0], self.coeffs, self.cfg.basis, self.cfg.domain,
+                        self.graph, st.covered,
+                        vis if self.method == "distgat" else None,
+                    )
+                    st.patches += 1
+                    st.history.append(st.eps)
+                    self.cache.note_patch(client, self._fingerprint(client), pack)
+                    drift[client] = st.eps
+                    if self.drift(client)["bound"] > self.refresh_threshold:
+                        self.refresh(client)
+                        refreshed.append(client)
+                else:
+                    # Pack-free engines re-read the graph arrays: exact, no drift.
+                    self.cache.revalidate(client, self._fingerprint(client))
+                    st.history.append(0.0)
+                    drift[client] = 0.0
         return {
             "new_nodes": delta.num_new_nodes,
             "new_edges": delta.num_new_edges,
@@ -394,9 +400,10 @@ class GraphInferenceServer:
             return memo[1]
         entry = self._ensure_client(client)
         vis = self._visible_mask_np(client)
-        logits = np.asarray(self._forward(
-            self.params, entry.pack, self._h, self._idx, jnp.asarray(vis)
-        ))
+        with telemetry.span("serving.client_forward", client=client):
+            logits = np.asarray(self._forward(
+                self.params, entry.pack, self._h, self._idx, jnp.asarray(vis)
+            ))
         self._logits_memo[client] = (self._version, logits)
         return logits
 
@@ -411,14 +418,18 @@ class GraphInferenceServer:
                 )
             by_client.setdefault(int(q.client), []).append(i)
         out: List[Optional[QueryResult]] = [None] * len(queries)
-        for client, idxs in by_client.items():
-            logits = self._client_logits(client)
-            for i in idxs:
-                row = logits[queries[i].node]
-                out[i] = QueryResult(
-                    client=client, node=int(queries[i].node),
-                    logits=row, label=int(np.argmax(row)),
-                )
+        with telemetry.span(
+            "serving.serve_batch", queries=len(queries), clients=len(by_client)
+        ):
+            for client, idxs in by_client.items():
+                logits = self._client_logits(client)
+                for i in idxs:
+                    row = logits[queries[i].node]
+                    out[i] = QueryResult(
+                        client=client, node=int(queries[i].node),
+                        logits=row, label=int(np.argmax(row)),
+                    )
+        telemetry.counter("serving.queries").inc(len(queries))
         return out  # type: ignore[return-value]
 
     # -- persistence --------------------------------------------------------

@@ -1,0 +1,101 @@
+"""Per-run manifests: the provenance block attached to results and bundles.
+
+A manifest answers "what produced this number?" without rerunning
+anything: a content hash of the exact config, the execution backend and
+mesh shape, how many XLA compilations the process performed (and how long
+they took — counted by the :mod:`jax.monitoring` hook installed in
+:mod:`repro.telemetry`), and the package versions that were loaded. It is
+plain JSON-serializable data, cheap to build, and attached to every
+Trainer result (``result["manifest"]``) and serving checkpoint bundle
+(``meta["manifest"]``) whether or not tracing is enabled — provenance is
+not an opt-in.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import platform
+import sys
+import time
+from typing import Any, Dict, Optional
+
+__all__ = ["config_hash", "build_manifest"]
+
+
+def _jsonable(obj: Any) -> Any:
+    """A deterministic JSON-friendly form of a (possibly nested dataclass)
+    config object."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return {f.name: _jsonable(getattr(obj, f.name))
+                for f in dataclasses.fields(obj)}
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    return repr(obj)
+
+
+def config_hash(cfg: Any) -> str:
+    """sha1 of the config's canonical JSON form — equal configs hash
+    equal across processes and sessions, any field change changes it."""
+    blob = json.dumps(_jsonable(cfg), sort_keys=True)
+    return hashlib.sha1(blob.encode()).hexdigest()
+
+
+def _package_versions() -> Dict[str, str]:
+    versions = {"python": platform.python_version()}
+    for pkg in ("jax", "jaxlib", "numpy"):
+        mod = sys.modules.get(pkg)
+        if mod is None:
+            try:
+                mod = __import__(pkg)
+            except Exception:
+                continue
+        versions[pkg] = str(getattr(mod, "__version__", "unknown"))
+    return versions
+
+
+def build_manifest(
+    cfg: Any = None,
+    *,
+    mesh: Optional[Dict[str, Any]] = None,
+    extra: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    """Assemble the run manifest.
+
+    ``cfg`` is any (dataclass) config — hashed, with its ``backend``
+    field surfaced when present. ``mesh`` is an already-serialized mesh
+    description (``trainer.mesh_description``'s dict — passed in, not
+    recomputed, to keep this module jax-free on import).
+    """
+    from repro import telemetry  # late: telemetry imports this module
+
+    m: Dict[str, Any] = {
+        "created_unix": time.time(),
+        "telemetry_enabled": telemetry.enabled(),
+        "jit_compiles": telemetry.jit_compile_count(),
+        "jit_compile_seconds": telemetry.jit_compile_seconds(),
+        "versions": _package_versions(),
+        "platform": platform.platform(),
+    }
+    jax = sys.modules.get("jax")
+    if jax is not None:
+        try:
+            m["jax_backend"] = str(jax.default_backend())
+            m["device_count"] = int(jax.device_count())
+            m["process_count"] = int(jax.process_count())
+        except Exception:
+            pass
+    if cfg is not None:
+        m["config_hash"] = config_hash(cfg)
+        backend = getattr(cfg, "backend", None)
+        if backend is not None:
+            m["backend"] = str(backend)
+    if mesh is not None:
+        m["mesh"] = mesh
+    if extra:
+        m.update(extra)
+    return m
