@@ -77,6 +77,12 @@ POSITIVE_KEYS = {
 EPSILON_KEYS = {"epsilon", "epsilon_vs_server", "pack_epsilon"}
 NOISE_KEYS = ("noise_multiplier", "pack_noise_multiplier")
 
+# Privacy-audit curves (BENCH_privacy.json): the empirical attack must see
+# the DP noise. The no-noise endpoint (largest epsilon, normally inf) has
+# to leak strictly more than the tightest-epsilon endpoint — a flat or
+# inverted curve means either the attack or the mechanism is broken.
+ATTACK_KEY = "attack_advantage"
+
 # Trajectory mode: perf columns compared against the previous git revision
 # of the same BENCH file, with the direction that counts as "better".
 TRAJECTORY_DIRECTIONS = {
@@ -241,6 +247,35 @@ def iter_numbers(obj, path: str) -> Iterator[Tuple[str, str, float]]:
         yield path, path.rsplit(".", 1)[-1].split("[", 1)[0], obj
 
 
+def check_attack_curve(rows: List) -> List[str]:
+    """Endpoint ordering of an attack-advantage-vs-epsilon sweep.
+
+    Applies only when >= 2 rows carry both an ``epsilon`` and an
+    ``attack_advantage`` at distinct epsilons; other files are untouched.
+    """
+    pts = [
+        (row["epsilon"], row[ATTACK_KEY], i)
+        for i, row in enumerate(rows)
+        if isinstance(row, dict)
+        and isinstance(row.get("epsilon"), (int, float))
+        and isinstance(row.get(ATTACK_KEY), (int, float))
+        and not math.isnan(row["epsilon"])
+        and not math.isnan(row[ATTACK_KEY])
+    ]
+    if len({e for e, _, _ in pts}) < 2:
+        return []
+    loose = max(pts)  # largest epsilon: weakest guarantee, normally inf
+    tight = min(pts)
+    if loose[1] > tight[1]:
+        return []
+    return [
+        f"attack curve not monotone: advantage {loose[1]:.6g} at "
+        f"eps={loose[0]:g} (rows[{loose[2]}]) must exceed {tight[1]:.6g} "
+        f"at eps={tight[0]:g} (rows[{tight[2]}]) — the attack does not "
+        "see the DP noise"
+    ]
+
+
 def check_file(path: pathlib.Path) -> List[str]:
     problems: List[str] = []
     try:
@@ -250,6 +285,7 @@ def check_file(path: pathlib.Path) -> List[str]:
     rows = data if isinstance(data, list) else [data]
     if not rows:
         problems.append(f"{path}: empty result list — the sweep produced no rows")
+    problems.extend(f"{path}: {p}" for p in check_attack_curve(rows))
     for i, row in enumerate(rows):
         for leaf_path, key, x in iter_numbers(row, f"rows[{i}]"):
             if math.isnan(x):

@@ -70,8 +70,11 @@ from repro.federated.partition import (
 from repro.graphs.graph import Graph
 from repro.optim.adamw import adam_init
 from repro.privacy import (
+    DropoutRecoveryError,
+    SecureAggRound,
     add_client_mask,
     client_round_key,
+    flatten_pytree,
     mask_base_key,
     noise_base_key,
 )
@@ -88,8 +91,15 @@ _CHURN_STREAM = 0xC0C0
 
 def cohort_active(cfg) -> bool:
     """True when the run goes through the cohort scheduler: the cohort
-    size knob is set, or buffered aggregation was requested."""
-    return cfg.max_concurrent_clients is not None or cfg.aggregation_mode != "sync"
+    size knob is set, buffered aggregation was requested, or the real
+    secure-aggregation protocol is on (its key agreement and finite-field
+    unmasking run host-side, between jitted steps — only this driver has
+    a host hop per cohort)."""
+    return (
+        cfg.max_concurrent_clients is not None
+        or cfg.aggregation_mode != "sync"
+        or cfg.privacy.secure_agg_protocol
+    )
 
 
 def cohort_lanes(cfg, backend: str, num_devices: Optional[int] = None) -> int:
@@ -294,6 +304,61 @@ def make_shard_cohort_step(cfg, local_update: Callable, mesh, K: int) -> Callabl
     )
 
 
+def make_vmap_collect_step(cfg, local_update: Callable, K: int) -> Callable:
+    """One cohort on vmap lanes, returning RAW per-lane updated params.
+
+    The secure-agg protocol path: no in-jit masks and no in-jit fold —
+    masking and aggregation happen host-side in the finite field
+    (privacy/secure_agg.py), so the step only runs the local updates.
+    """
+    per_client_nb = cfg.method == "distgat"
+    noise_base = noise_base_key(cfg.seed)
+
+    @jax.jit
+    def step(gparams, opt_slice, nb, tr, ids, t):
+        noise_keys = jax.vmap(lambda c: client_round_key(noise_base, t, c))(ids)
+        return jax.vmap(
+            local_update, in_axes=(None, 0, 0 if per_client_nb else None, 0, 0)
+        )(gparams, opt_slice, nb, tr, noise_keys)
+
+    return step
+
+
+def make_shard_collect_step(cfg, local_update: Callable, mesh, K: int) -> Callable:
+    """Shard_map twin of :func:`make_vmap_collect_step`: one device per
+    lane, per-lane params returned WITHOUT any cross-lane collective —
+    the field aggregation is host-side and associative, so no psum is
+    needed (or wanted: the server must only ever see masked payloads)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro._compat.jax_compat import shard_map
+
+    per_client_nb = cfg.method == "distgat"
+    noise_base = noise_base_key(cfg.seed)
+
+    def body(gparams, opt_slice, nb, tr, ids, t):
+        cid = ids[0]
+        opt1 = jax.tree.map(lambda x: x[0], opt_slice)
+        nbm = nb[0] if per_client_nb else nb
+        noise_key = client_round_key(noise_base, t, cid)
+        params, new_opt = local_update(gparams, opt1, nbm, tr[0], noise_key)
+        return (
+            jax.tree.map(lambda x: x[None], params),
+            jax.tree.map(lambda x: x[None], new_opt),
+        )
+
+    lanes = P("lanes")
+    return jax.jit(
+        shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(), lanes, lanes if per_client_nb else P(),
+                      lanes, lanes, P()),
+            out_specs=(lanes, lanes),
+        )
+    )
+
+
 def _lanes_mesh(lanes: int):
     """A mesh of ``lanes`` devices (axis "lanes") — over DEVICES, not
     clients: the cohort scheduler owns the client dimension."""
@@ -312,6 +377,55 @@ def _lanes_mesh(lanes: int):
 # ---------------------------------------------------------------------------
 # The streaming round driver (shared by both backends)
 # ---------------------------------------------------------------------------
+
+def _finalize_protocol_round(
+    sar: SecureAggRound,
+    cfg,
+    t: int,
+    dim: int,
+    priv,
+    lam_by: Dict[int, float],
+    vec_by: Dict[int, np.ndarray],
+    gvec: np.ndarray,
+    unflatten: Callable,
+):
+    """Server side of the round: unmask, recover dropouts, decode the mean.
+
+    When seed reconstruction is impossible (survivors below the Shamir
+    threshold) the round degrades: the failure is counted and the protocol
+    re-runs among the survivors under a fresh ``attempt`` index — in this
+    simulation the clients' deltas are still in hand, so the re-run is a
+    re-mask + re-sum rather than a re-train, exactly as the real protocol's
+    retry round would be.
+    """
+    survivors = sorted(lam_by)
+    try:
+        total, info = sar.finalize(survivors)
+        if info["dropped"]:
+            telemetry.counter("privacy.secure_agg.recovered_seeds").inc(
+                info["recovered_seeds"]
+            )
+            telemetry.event(
+                "privacy.secure_agg.recovered", round=t, dropped=info["dropped"]
+            )
+    except DropoutRecoveryError as exc:
+        telemetry.counter("privacy.secure_agg.recovery_failures").inc()
+        telemetry.event("privacy.secure_agg.degraded", round=t, reason=str(exc))
+        retry = SecureAggRound(
+            cfg.seed, t, survivors, dim,
+            quant_bits=priv.quant_bits, quant_range=priv.quant_range,
+            threshold=None, attempt=1,
+        )
+        for cid in survivors:
+            retry.accumulate(cid, retry.client_payload(cid, vec_by[cid]))
+        total, info = retry.finalize(survivors)
+    if info["saturated"]:
+        telemetry.counter("privacy.secure_agg.saturated_elements").inc(
+            info["saturated"]
+        )
+    wsum = sum(lam_by.values())
+    return unflatten(gvec + total / wsum)
+
 
 def run_cohort_rounds(g: Graph, cfg, backend: str, mesh=None) -> Dict[str, Any]:
     """Cohort-streamed realisation of paper Algorithm 2 for either backend.
@@ -365,7 +479,9 @@ def run_cohort_rounds(g: Graph, cfg, backend: str, mesh=None) -> Dict[str, Any]:
             raise NotImplementedError(
                 "cohort streaming runs on a single-process mesh; multi-"
                 "process runs keep the one-client-per-shard layout (unset "
-                "max_concurrent_clients / use aggregation_mode='sync')"
+                "max_concurrent_clients / use aggregation_mode='sync', and "
+                "with secure aggregation use secure_agg_mode='pairwise' — "
+                "the in-jit masks that cancel in the cross-process psum)"
             )
         if mesh is not None:
             lanes = int(mesh.devices.size)
@@ -382,11 +498,20 @@ def run_cohort_rounds(g: Graph, cfg, backend: str, mesh=None) -> Dict[str, Any]:
     val_mask = jnp.asarray(g.val_mask)
     test_mask = jnp.asarray(g.test_mask)
 
+    protocol = cfg.privacy.secure_agg_protocol
     local_update = make_local_update(make_loss_fn(forward, labels), cfg)
     if backend == "shard_map":
-        step = make_shard_cohort_step(cfg, local_update, mesh, K)
+        step = (
+            make_shard_collect_step(cfg, local_update, mesh, K)
+            if protocol
+            else make_shard_cohort_step(cfg, local_update, mesh, K)
+        )
     else:
-        step = make_vmap_cohort_step(cfg, local_update, K)
+        step = (
+            make_vmap_collect_step(cfg, local_update, K)
+            if protocol
+            else make_vmap_cohort_step(cfg, local_update, K)
+        )
 
     @jax.jit
     def evaluate(params):
@@ -430,6 +555,9 @@ def run_cohort_rounds(g: Graph, cfg, backend: str, mesh=None) -> Dict[str, Any]:
     traced = telemetry.enabled()
     priv = cfg.privacy
     q = num_selected(cfg) / K
+    if protocol:
+        gvec0, unflatten = flatten_pytree(global_params)
+        dim = int(gvec0.size)
     for t in range(cfg.rounds):
         plan = plans[t]
         agg: Any = RunningAggregate(
@@ -437,6 +565,21 @@ def run_cohort_rounds(g: Graph, cfg, backend: str, mesh=None) -> Dict[str, Any]:
             weight=np.zeros((), np.float32),
         )
         g_round = global_params          # every cohort dispatches from here
+        if protocol:
+            # Key agreement + secret sharing over the ADVERTISED cohort —
+            # the pre-churn CS(t) selection: clients that later drop are
+            # exactly the ones whose masks the recovery phase removes.
+            advertised = sorted(
+                {int(c) for c in np.asarray(chosen_sched[t]).reshape(-1)}
+            )
+            sar = SecureAggRound(
+                cfg.seed, t, advertised, dim,
+                quant_bits=priv.quant_bits, quant_range=priv.quant_range,
+                threshold=priv.secure_agg_threshold,
+            )
+            gvec = flatten_pytree(g_round)[0]
+            lam_by: Dict[int, float] = {}
+            vec_by: Dict[int, np.ndarray] = {}
         t_arr = jnp.asarray(t, jnp.int32)
         with telemetry.span(
             "round", round=t, backend=backend, cohorts=int(plan.ids.shape[0])
@@ -451,15 +594,44 @@ def run_cohort_rounds(g: Graph, cfg, backend: str, mesh=None) -> Dict[str, Any]:
                         opt_slice = jax.tree.map(
                             lambda x: x[np.minimum(ids, K - 1)], opt_bank
                         )
-                    with telemetry.span("step"):
-                        agg, new_opt = step(
-                            g_round, agg, opt_slice,
-                            nb if nb is not None else shared_nb, tr,
-                            ids, w, jnp.asarray(plan.staleness[c], jnp.float32),
-                            plan.sel_row, t_arr,
-                        )
-                    with telemetry.span("host_transfer"):
-                        new_opt = jax.device_get(new_opt)
+                    if protocol:
+                        with telemetry.span("step"):
+                            stacked, new_opt = step(
+                                g_round, opt_slice,
+                                nb if nb is not None else shared_nb, tr,
+                                ids, t_arr,
+                            )
+                        with telemetry.span("host_transfer"):
+                            stacked = jax.device_get(stacked)
+                            new_opt = jax.device_get(new_opt)
+                        # Client side of the protocol: each live lane's
+                        # λ-scaled delta is quantized, masked, and only the
+                        # masked field payload reaches the running sum.
+                        lam_c = float(plan.staleness[c])
+                        leaves = jax.tree.leaves(stacked)
+                        with telemetry.span("secure_agg_mask"):
+                            for lane in np.nonzero(w > 0)[0]:
+                                cid = int(ids[lane])
+                                cvec = np.concatenate(
+                                    [
+                                        np.asarray(x[lane], np.float64).ravel()
+                                        for x in leaves
+                                    ]
+                                )
+                                delta = lam_c * (cvec - gvec)
+                                sar.accumulate(cid, sar.client_payload(cid, delta))
+                                lam_by[cid] = lam_c
+                                vec_by[cid] = delta
+                    else:
+                        with telemetry.span("step"):
+                            agg, new_opt = step(
+                                g_round, agg, opt_slice,
+                                nb if nb is not None else shared_nb, tr,
+                                ids, w, jnp.asarray(plan.staleness[c], jnp.float32),
+                                plan.sel_row, t_arr,
+                            )
+                        with telemetry.span("host_transfer"):
+                            new_opt = jax.device_get(new_opt)
                     live_lane = w > 0
 
                     def scatter(bank, new):
@@ -469,15 +641,20 @@ def run_cohort_rounds(g: Graph, cfg, backend: str, mesh=None) -> Dict[str, Any]:
                     with telemetry.span("aggregation_fold"):
                         opt_bank = jax.tree.map(scatter, opt_bank, new_opt)
             with telemetry.span("aggregate"):
-                agg = jax.device_get(agg)
-                mean = jax.tree.map(
-                    lambda s: (s / agg.weight).astype(s.dtype), agg.sum
-                )
+                if protocol:
+                    mean = _finalize_protocol_round(
+                        sar, cfg, t, dim, priv, lam_by, vec_by, gvec, unflatten
+                    )
+                else:
+                    agg = jax.device_get(agg)
+                    mean = jax.tree.map(
+                        lambda s: (s / agg.weight).astype(s.dtype), agg.sum
+                    )
                 if cfg.aggregator == "fedadam":
                     new_gp, server_state = server_apply(g_round, mean, server_state)
                     global_params = jax.device_get(new_gp)
                 else:
-                    global_params = mean
+                    global_params = jax.device_get(mean) if protocol else mean
             with telemetry.span("evaluate"):
                 va, ta = evaluate(global_params)
         val_curve.append(float(va))

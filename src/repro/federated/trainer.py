@@ -55,6 +55,7 @@ from repro.privacy import (
     client_round_key,
     make_dp_transform,
     mask_base_key,
+    node_influence_bound,
     noise_base_key,
     noisy_pack,
     pack_noise_key,
@@ -137,9 +138,19 @@ def build_forward(
         model = FedGAT(method_model_config(cfg))
         model.precommunicate(key, g)
         if cfg.privacy.pack_noise_multiplier > 0 and model.pack is not None:
+            # Node-level accounting calibrates to the node-influence bound
+            # of the (degree-capped) neighbour lists; edge-level (the
+            # default) to a single neighbour term.
+            granularity = (
+                "node" if cfg.privacy.dp_granularity == "node" else "edge"
+            )
+            influence = (
+                node_influence_bound(g) if granularity == "node" else 1
+            )
             model.pack = noisy_pack(
                 pack_noise_key(cfg.seed), model.pack,
                 jnp.asarray(g.features), cfg.privacy.pack_noise_multiplier,
+                granularity=granularity, node_influence=influence,
             )
 
         def init_fn(k):
@@ -315,9 +326,13 @@ def build_result(
     present either way so the schema never varies across paths.
     """
     best_val, best_test = best_metrics(val_curve, test_curve)
+    node_influence = (
+        node_influence_bound(g) if cfg.privacy.dp_granularity == "node" else None
+    )
     privacy = privacy_report(
         cfg.privacy, rounds=cfg.rounds, num_clients=cfg.num_clients,
         num_selected=num_selected(cfg), pack_released=pack_released(cfg),
+        node_influence=node_influence,
     )
     comm = comm_report(cfg, g, part)
     if telemetry.enabled():
@@ -398,6 +413,15 @@ class Trainer:
                     "churn or set noise_multiplier=0"
                 )
         cfg.privacy.validate()
+        if cfg.privacy.secure_agg_protocol and cfg.churn_join_rate > 0:
+            raise ValueError(
+                "secure_agg_mode='protocol' runs key agreement over the "
+                "round's advertised CS(t) cohort, so clients joining "
+                "mid-round (churn_join_rate > 0) have no pairwise keys — "
+                "use secure_agg_mode='pairwise' or disable join churn "
+                "(drop churn is supported: dropped clients' masks are "
+                "recovered from secret shares)"
+            )
         if cfg.privacy.pack_noise_multiplier > 0 and not pack_released(cfg):
             raise ValueError(
                 f"pack_noise_multiplier > 0 but method {cfg.method!r} with "

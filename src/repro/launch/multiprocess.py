@@ -332,6 +332,11 @@ def _worker_main(args: argparse.Namespace) -> int:
             noise_multiplier=args.noise_multiplier,
             clip=args.clip,
             secure_agg=args.secure_agg,
+            # The field-masking protocol needs the host-side cohort driver,
+            # which is single-process; across processes the in-jit pairwise
+            # masks (cancelling inside the cross-process psum) are the
+            # supported mode.
+            secure_agg_mode="pairwise",
         ),
     )
     res = run_federated(g, cfg)

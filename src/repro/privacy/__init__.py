@@ -10,18 +10,28 @@ vmap and shard_map Trainer backends:
   * privacy/accountant.py — RDP/moments accountant composing the per-round
                             sampled Gaussian mechanism (CS(t) subsampling
                             amplification) into an (ε, δ) figure;
-  * privacy/secure_agg.py — simulated pairwise-mask secure aggregation
-                            whose masks cancel in the FedAvg sum;
+  * privacy/secure_agg.py — secure aggregation: the real multi-party
+                            protocol (DH key agreement, finite-field masks
+                            over quantized updates, Shamir dropout
+                            recovery — ``secure_agg_mode="protocol"``) and
+                            the legacy in-jit pairwise PRF masks
+                            (``"pairwise"``);
+  * privacy/shamir.py     — t-of-n secret sharing backing the protocol's
+                            dropout-recovery phase;
   * privacy/pack_dp.py    — calibrated one-shot noise on the
-                            pre-communicated FedGAT pack.
+                            pre-communicated FedGAT pack;
+  * privacy/attacks/      — empirical auditing: node membership-inference
+                            harness measuring what ε buys in practice.
 
 :func:`privacy_report` is the result-schema hook: it turns a run's config
 into the ``privacy`` dict (and ``epsilon`` column) of ``build_result``.
+``docs/threat_model.md`` maps each ``trust_model`` value to its mechanism
+and the exact claim the reported ε makes.
 """
 from __future__ import annotations
 
 import math
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 from repro.privacy.accountant import (
     DEFAULT_ORDERS,
@@ -29,6 +39,7 @@ from repro.privacy.accountant import (
     compute_epsilon,
     rdp_sampled_gaussian,
     rdp_to_epsilon,
+    sensitivity_factor,
 )
 from repro.privacy.config import PrivacyConfig
 from repro.privacy.dp import (
@@ -42,12 +53,21 @@ from repro.privacy.dp import (
 )
 from repro.privacy.pack_dp import (
     feature_norm_bound,
+    node_influence_bound,
     noisy_pack,
     pack_release_steps,
     pack_sensitivities,
     projector_norm,
 )
-from repro.privacy.secure_agg import add_client_mask, client_mask, pair_key
+from repro.privacy.secure_agg import (
+    DropoutRecoveryError,
+    SecureAggRound,
+    add_client_mask,
+    client_mask,
+    flatten_pytree,
+    pair_key,
+    quantization_step,
+)
 
 __all__ = [
     "PrivacyConfig",
@@ -56,6 +76,7 @@ __all__ = [
     "compute_epsilon",
     "rdp_sampled_gaussian",
     "rdp_to_epsilon",
+    "sensitivity_factor",
     "client_round_key",
     "make_dp_transform",
     "mask_base_key",
@@ -67,7 +88,12 @@ __all__ = [
     "pack_release_steps",
     "pack_sensitivities",
     "feature_norm_bound",
+    "node_influence_bound",
     "projector_norm",
+    "DropoutRecoveryError",
+    "SecureAggRound",
+    "flatten_pytree",
+    "quantization_step",
     "add_client_mask",
     "client_mask",
     "pair_key",
@@ -82,6 +108,7 @@ def privacy_report(
     num_clients: int,
     num_selected: int,
     pack_released: bool = True,
+    node_influence: Optional[int] = None,
 ) -> Dict[str, Any]:
     """The serializable privacy summary stored in every Trainer result.
 
@@ -101,44 +128,69 @@ def privacy_report(
     separately, and only when a pack was actually released
     (``pack_released`` — the Trainer passes this; packless methods/engines
     are rejected at config time).
+
+    ``dp_granularity="node"`` reports all three epsilons for the
+    node-substitution unit of protection instead of the client-level one:
+    update epsilons pay the factor-2 substitution sensitivity
+    (accountant.sensitivity_factor) and the pack epsilon pays the
+    node-influence bound (``node_influence``, from
+    pack_dp.node_influence_bound on the degree-capped graph — the Trainer
+    passes it; required whenever pack noise is accounted at node level).
     """
     priv.validate()
     q = num_selected / max(num_clients, 1)
+    sens = sensitivity_factor(priv.dp_granularity)
     if not priv.dp_enabled:
         epsilon = epsilon_vs_server = None
     elif priv.noise_multiplier <= 0:
         epsilon = epsilon_vs_server = math.inf
     else:
-        epsilon = compute_epsilon(priv.noise_multiplier, rounds, q, priv.delta)
+        epsilon = compute_epsilon(
+            priv.noise_multiplier, rounds, q, priv.delta, sensitivity=sens
+        )
         epsilon_vs_server = (
             epsilon
             if priv.secure_agg
             else compute_epsilon(
                 priv.noise_multiplier / math.sqrt(max(num_selected, 1)),
-                rounds, q, priv.delta,
+                rounds, q, priv.delta, sensitivity=sens,
             )
         )
     # The pack release is a JOINT mechanism: one neighbour's data shifts
     # every noised tensor, so the accountant composes one Gaussian step
     # per tensor (4 for both pack types), not a single step.
-    pack_epsilon = (
-        compute_epsilon(
-            priv.pack_noise_multiplier, pack_release_steps(), 1.0, priv.delta
+    if priv.pack_noise_multiplier > 0 and pack_released:
+        pack_sens = 1.0
+        if priv.dp_granularity == "node":
+            if node_influence is None:
+                raise ValueError(
+                    "dp_granularity='node' with pack noise requires "
+                    "node_influence (see pack_dp.node_influence_bound)"
+                )
+            pack_sens = float(node_influence)
+        pack_epsilon = compute_epsilon(
+            priv.pack_noise_multiplier,
+            pack_release_steps(),
+            1.0,
+            priv.delta,
+            sensitivity=pack_sens,
         )
-        if priv.pack_noise_multiplier > 0 and pack_released
-        else None
-    )
+    else:
+        pack_epsilon = None
     return {
         "enabled": priv.enabled,
         "mechanism": "dp-fedavg/sgm-rdp",
         "noise_multiplier": priv.noise_multiplier,
         "clip": priv.clip,
         "secure_agg": priv.secure_agg,
+        "secure_agg_mode": priv.secure_agg_mode if priv.secure_agg else None,
         "trust_model": "secure-agg" if priv.secure_agg else "trusted-aggregator",
         "pack_noise_multiplier": priv.pack_noise_multiplier,
         "delta": priv.delta,
         "sampling_rate": q,
         "rounds": rounds,
+        "dp_granularity": priv.dp_granularity,
+        "node_influence": node_influence,
         "epsilon": epsilon,
         "epsilon_vs_server": epsilon_vs_server,
         "pack_epsilon": pack_epsilon,

@@ -112,18 +112,50 @@ class RdpAccountant:
         return rdp_to_epsilon(self._rdp, self.orders, delta)
 
 
+def sensitivity_factor(granularity: str) -> float:
+    """L2-sensitivity multiplier of the chosen unit of protection.
+
+    "client": add/remove one client's entire shard — removing a client
+    removes one vector of norm <= C from the noised sum, sensitivity C,
+    factor 1 (the calibration the Gaussian mechanism assumes).
+
+    "node": substitute one graph node inside a client's shard — the
+    client's delta moves within the C-ball, so the released sum changes
+    by at most ||δ - δ'|| <= 2C, factor 2. Noise calibrated to C therefore
+    buys node-level protection at an *effective* multiplier σ/2; at fixed
+    σ, ε_node >= ε_client (the ordering the edge-case tests pin down).
+    Node-level accounting is only sound because degree-capped sampling
+    (graphs.sample_neighbors) bounds one node's influence on every other
+    client artifact — see pack_dp.node_influence_bound for the pack leg.
+    """
+    if granularity == "client":
+        return 1.0
+    if granularity == "node":
+        return 2.0
+    raise ValueError(f"unknown dp_granularity {granularity!r}")
+
+
 def compute_epsilon(
     noise_multiplier: float,
     steps: int,
     sampling_rate: float,
     delta: float,
     orders: Optional[Sequence[int]] = None,
+    sensitivity: float = 1.0,
 ) -> float:
-    """ε of ``steps`` SGM rounds (∞ when noise is off, 0 when steps == 0)."""
+    """ε of ``steps`` SGM rounds (∞ when noise is off, 0 when steps == 0).
+
+    ``sensitivity`` rescales the unit of protection: noise calibrated to
+    sensitivity C protects a quantity of sensitivity ``sensitivity * C``
+    at effective multiplier ``noise_multiplier / sensitivity`` (e.g. 2.0
+    for node-level substitution — see :func:`sensitivity_factor`).
+    """
     if steps == 0:
         return 0.0
+    if sensitivity <= 0:
+        raise ValueError(f"sensitivity must be > 0, got {sensitivity}")
     if noise_multiplier <= 0:
         return math.inf
     acct = RdpAccountant(orders)
-    acct.step(noise_multiplier, sampling_rate, steps)
+    acct.step(noise_multiplier / sensitivity, sampling_rate, steps)
     return acct.get_epsilon(delta)

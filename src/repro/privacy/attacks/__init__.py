@@ -1,0 +1,24 @@
+"""repro.privacy.attacks — empirical privacy auditing.
+
+The accountant (privacy/accountant.py) upper-bounds what an adversary
+*could* learn; this package measures what a concrete adversary *does*
+learn, so the two can be plotted against each other
+(benchmarks/privacy_audit.py, BENCH_privacy.json). First attack: node
+membership inference against a trained federated model (mia.py), the
+standard audit for "was this node's label in the training set?".
+"""
+from repro.privacy.attacks.mia import (
+    attack_curve,
+    node_scores,
+    run_membership_inference,
+    shadow_attack,
+    threshold_attack,
+)
+
+__all__ = [
+    "attack_curve",
+    "node_scores",
+    "run_membership_inference",
+    "shadow_attack",
+    "threshold_attack",
+]

@@ -13,6 +13,10 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import Optional
+
+SECURE_AGG_MODES = ("protocol", "pairwise")
+DP_GRANULARITIES = ("client", "node")
 
 
 @dataclass(frozen=True)
@@ -30,13 +34,40 @@ class PrivacyConfig:
                           clipping; finite clip is required whenever
                           ``noise_multiplier > 0`` (noise is calibrated to
                           the clip norm).
-    secure_agg            simulate pairwise-mask secure aggregation: every
-                          participating client adds antisymmetric masks that
-                          provably cancel in the FedAvg/weighted-psum sum,
-                          so the server only ever sees masked updates.
-    mask_scale            std of each pairwise mask (cosmetic — masks cancel
-                          exactly in real arithmetic; the scale only bounds
-                          the float cancellation error).
+    secure_agg            enable secure aggregation: the server only ever
+                          sees masked client updates. The mechanism is
+                          chosen by ``secure_agg_mode``.
+    secure_agg_mode       "protocol" (default): real multi-party masking —
+                          per-round DH key agreement, finite-field masks
+                          over quantized updates, Shamir-based dropout
+                          recovery — run host-side via the cohort driver
+                          (see privacy/secure_agg.py). "pairwise": the
+                          legacy in-jit antisymmetric PRF masks that cancel
+                          in the FedAvg/weighted-psum sum; required for the
+                          multi-process launcher.
+    quant_bits            fixed-point resolution of the protocol's field
+                          encoding (protocol mode only). Per-client
+                          round-trip error <= quant_range / (2^bits - 1).
+    quant_range           symmetric clamp range of the field encoding:
+                          update-delta elements outside
+                          [-quant_range, quant_range] saturate (counted in
+                          telemetry). Protocol mode only.
+    secure_agg_threshold  Shamir reconstruction threshold t for dropout
+                          recovery: a dropped client's mask seeds can be
+                          reconstructed from any t surviving shareholders,
+                          and fewer than t reveal nothing. None (default)
+                          picks a majority, min(n-1, n//2 + 1).
+    mask_scale            std of each pairwise mask (pairwise mode;
+                          cosmetic — masks cancel exactly in real
+                          arithmetic; the scale only bounds the float
+                          cancellation error).
+    dp_granularity        unit of protection the accountant reports for:
+                          "client" (default) — add/remove one client's
+                          whole shard; "node" — substitute one graph node
+                          within a shard, sensitivity 2·clip (factor-2
+                          tighter noise requirement) and pack sensitivity
+                          scaled by the node-influence bound from
+                          degree-capped sampling (see privacy/pack_dp.py).
     pack_noise_multiplier σ of the one-shot Gaussian mechanism on the
                           pre-communicated FedGAT pack (K1/K2/M tensors),
                           calibrated per-tensor to its neighbour-level
@@ -47,9 +78,19 @@ class PrivacyConfig:
     noise_multiplier: float = 0.0
     clip: float = math.inf
     secure_agg: bool = False
+    secure_agg_mode: str = "protocol"
+    quant_bits: int = 32
+    quant_range: float = 32.0
+    secure_agg_threshold: Optional[int] = None
     mask_scale: float = 1.0
     pack_noise_multiplier: float = 0.0
     delta: float = 1e-5
+    dp_granularity: str = "client"
+
+    @property
+    def secure_agg_protocol(self) -> bool:
+        """The real (field-masking) protocol is the active secure-agg mode."""
+        return self.secure_agg and self.secure_agg_mode == "protocol"
 
     @property
     def dp_enabled(self) -> bool:
@@ -82,4 +123,26 @@ class PrivacyConfig:
             raise ValueError(
                 "noise_multiplier > 0 requires a finite clip norm: Gaussian "
                 "noise is calibrated to the clip (sensitivity) bound"
+            )
+        if self.secure_agg_mode not in SECURE_AGG_MODES:
+            raise ValueError(
+                f"secure_agg_mode must be one of {SECURE_AGG_MODES}, "
+                f"got {self.secure_agg_mode!r}"
+            )
+        if not (8 <= self.quant_bits <= 40):
+            raise ValueError(
+                f"quant_bits must be in [8, 40] (field capacity), got {self.quant_bits}"
+            )
+        if not (math.isfinite(self.quant_range) and self.quant_range > 0):
+            raise ValueError(
+                f"quant_range must be finite and > 0, got {self.quant_range}"
+            )
+        if self.secure_agg_threshold is not None and self.secure_agg_threshold < 1:
+            raise ValueError(
+                f"secure_agg_threshold must be >= 1, got {self.secure_agg_threshold}"
+            )
+        if self.dp_granularity not in DP_GRANULARITIES:
+            raise ValueError(
+                f"dp_granularity must be one of {DP_GRANULARITIES}, "
+                f"got {self.dp_granularity!r}"
             )

@@ -57,32 +57,89 @@ def projector_norm(r: float) -> float:
     return 0.5 * math.sqrt(2.0 + r * r + 1.0 / (r * r))
 
 
-def pack_sensitivities(pack: Any, h: Array) -> Dict[str, float]:
-    """Per-tensor neighbour-level sensitivity, keyed by pack field name."""
+def node_influence_bound(g: Any) -> int:
+    """Max number of sampled neighbour lists any single node appears in.
+
+    Changing one node's features perturbs one per-neighbour term in every
+    pack tensor row whose neighbour list contains that node, so node-level
+    pack sensitivity is (influence bound) x (edge-level sensitivity). On
+    an unsampled graph this is the max in-degree (unbounded in the worst
+    case); after degree-capped sampling (graphs.sample_neighbors) it is
+    bounded by construction — which is exactly why node-level accounting
+    rides on the sampled graph.
+    """
+    idx = jnp.asarray(g.nbr_idx).reshape(-1)
+    mask = jnp.asarray(g.nbr_mask).reshape(-1) > 0
+    n = int(jnp.asarray(g.nbr_idx).shape[0])
+    # Masked bincount: padded slots all count towards bucket 0 of a
+    # scratch array one past the real nodes.
+    safe = jnp.where(mask, idx, n)
+    counts = jnp.bincount(safe, length=n + 1)[:n]
+    return max(int(jnp.max(counts)), 1)
+
+
+def pack_sensitivities(
+    pack: Any,
+    h: Array,
+    *,
+    granularity: str = "edge",
+    node_influence: int = 1,
+) -> Dict[str, float]:
+    """Per-tensor sensitivity of the pack release, keyed by field name.
+
+    Default ``granularity="edge"`` is the neighbour-level bound documented
+    above. ``granularity="node"`` multiplies every tensor's bound by
+    ``node_influence`` (see :func:`node_influence_bound`): one node's
+    features enter at most that many per-neighbour terms per tensor.
+    """
+    if granularity not in ("edge", "node"):
+        raise ValueError(f"pack granularity must be 'edge' or 'node', got {granularity!r}")
+    scale = float(node_influence) if granularity == "node" else 1.0
+    if scale < 1.0:
+        raise ValueError(f"node_influence must be >= 1, got {node_influence}")
     hmax = feature_norm_bound(h)
     fields = set(pack._fields)
     if {"P", "M2", "K1", "K2"} <= fields:          # Matrix FedGAT pack
         s_u = projector_norm(float(pack.r))
-        return {
+        base = {
             "P": s_u,
             "M2": hmax * s_u,
             "K1": math.sqrt(2.0),
             "K2": math.sqrt(2.0) * hmax,
         }
-    if {"M1", "M2", "K1", "K3"} <= fields:         # Vector FedGAT pack
-        return {"M1": hmax, "M2": hmax, "K1": hmax, "K3": 1.0}
-    raise ValueError(
-        f"unknown pack type {type(pack).__name__!r} with fields {sorted(fields)}"
-    )
+    elif {"M1", "M2", "K1", "K3"} <= fields:       # Vector FedGAT pack
+        base = {"M1": hmax, "M2": hmax, "K1": hmax, "K3": 1.0}
+    else:
+        raise ValueError(
+            f"unknown pack type {type(pack).__name__!r} with fields {sorted(fields)}"
+        )
+    # A node touches at most `node_influence` per-neighbour terms of EVERY
+    # tensor (its own projector/feature appears once per containing row),
+    # so node-level sensitivity scales every edge-level bound uniformly.
+    return {k: scale * v for k, v in base.items()}
 
 
-def noisy_pack(key: Array, pack: Any, h: Array, noise_multiplier: float) -> Any:
-    """pack + N(0, (σ·sensitivity)² I) per tensor; same NamedTuple type out."""
+def noisy_pack(
+    key: Array,
+    pack: Any,
+    h: Array,
+    noise_multiplier: float,
+    *,
+    granularity: str = "edge",
+    node_influence: int = 1,
+) -> Any:
+    """pack + N(0, (σ·sensitivity)² I) per tensor; same NamedTuple type out.
+
+    ``granularity="node"`` calibrates to the node-level sensitivity
+    (edge-level bound x ``node_influence``) instead of the edge-level one.
+    """
     if noise_multiplier < 0:
         raise ValueError(f"noise_multiplier must be >= 0, got {noise_multiplier}")
     if pack is None or noise_multiplier == 0:
         return pack
-    sens = pack_sensitivities(pack, h)
+    sens = pack_sensitivities(
+        pack, h, granularity=granularity, node_influence=node_influence
+    )
     updates = {}
     for i, name in enumerate(pack._fields):
         if name in _SKIP_FIELDS or name not in sens:

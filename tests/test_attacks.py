@@ -1,0 +1,101 @@
+"""Membership-inference harness (privacy/attacks/mia.py).
+
+Synthetic-score tests pin down the attack math (curve, advantage, AUC,
+calibration) on distributions with known answers; one small end-to-end
+test drives the full train -> score -> attack loop on the tiny graph.
+"""
+import numpy as np
+import pytest
+
+from repro.core import FedGATConfig
+from repro.federated import FederatedConfig, PrivacyConfig
+from repro.privacy.attacks import (
+    attack_curve,
+    node_scores,
+    run_membership_inference,
+    shadow_attack,
+    threshold_attack,
+)
+from repro.privacy.attacks.mia import calibrated_attack
+from repro.graphs import make_cora_like
+
+
+def test_node_scores_loss_and_confidence_agree():
+    logits = np.array([[4.0, 0.0, 0.0], [0.0, 0.0, 4.0], [1.0, 1.0, 1.0]])
+    labels = np.array([0, 0, 1])
+    s = node_scores(logits, labels)
+    # confident correct -> low loss, high confidence
+    assert s["loss"][0] < s["loss"][2] < s["loss"][1]
+    assert s["confidence"][0] > s["confidence"][2] > s["confidence"][1]
+    np.testing.assert_allclose(s["confidence"], np.exp(-s["loss"]), rtol=1e-6)
+
+
+def test_attack_curve_extremes():
+    thr, tpr, fpr = attack_curve(np.array([1.0, 2.0]), np.array([-1.0, -2.0]))
+    # at the lowest threshold everyone is "member": TPR = FPR = 1
+    assert tpr[0] == 1.0 and fpr[0] == 1.0
+    # perfectly separated scores admit a perfect threshold
+    assert np.max(tpr - fpr) == 1.0
+
+
+def test_threshold_attack_on_separated_scores():
+    # members have LOW loss (member-oriented handles the sign flip)
+    out = threshold_attack(np.full(50, 0.1), np.full(50, 2.0), score="loss")
+    assert out["advantage"] == 1.0 and out["auc"] == 1.0
+
+
+def test_threshold_attack_on_identical_scores_is_zero():
+    same = np.full(64, 0.7)
+    out = threshold_attack(same, same.copy(), score="loss")
+    assert out["advantage"] == 0.0
+    assert out["auc"] == pytest.approx(0.5)  # tie-corrected
+
+
+def test_threshold_attack_random_scores_near_chance():
+    rng = np.random.default_rng(0)
+    out = threshold_attack(rng.normal(size=4000), rng.normal(size=4000))
+    assert out["auc"] == pytest.approx(0.5, abs=0.03)
+    assert out["advantage"] < 0.08
+
+
+def test_attack_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        threshold_attack(np.array([]), np.array([1.0]))
+    with pytest.raises(ValueError):
+        threshold_attack(np.array([1.0]), np.array([1.0]), score="entropy")
+
+
+def test_calibrated_attack_matches_oracle_at_oracle_threshold():
+    rng = np.random.default_rng(1)
+    member, nonmember = rng.normal(1.0, 1.0, 300), rng.normal(-1.0, 1.0, 300)
+    oracle = threshold_attack(member, nonmember, score="confidence")
+    cal = calibrated_attack(member, nonmember, oracle["threshold"],
+                            score="confidence")
+    assert cal["advantage"] == pytest.approx(oracle["advantage"])
+    # a miscalibrated threshold can only do worse
+    off = calibrated_attack(member, nonmember, oracle["threshold"] + 5.0,
+                            score="confidence")
+    assert off["advantage"] <= oracle["advantage"]
+
+
+_CFG = dict(
+    method="fedgat", num_clients=2, rounds=2, local_steps=2, seed=0,
+    model=FedGATConfig(engine="direct", degree=8),
+)
+
+
+def test_run_membership_inference_end_to_end():
+    g = make_cora_like("tiny", seed=0)
+    out = run_membership_inference(g, FederatedConfig(**_CFG))
+    assert 0.0 <= out["advantage"] <= 1.0
+    assert 0.0 <= out["auc"] <= 1.0
+    assert out["n_members"] == int(np.asarray(g.train_mask).sum())
+    assert out["n_nonmembers"] == int(np.asarray(g.test_mask).sum())
+    assert np.isfinite(out["member_mean"]) and np.isfinite(out["nonmember_mean"])
+    assert out["privacy"]["epsilon"] is None  # no DP in this config
+
+
+def test_shadow_attack_rejects_target_seed():
+    g = make_cora_like("tiny", seed=0)
+    with pytest.raises(ValueError, match="shadow seeds"):
+        shadow_attack(g, FederatedConfig(**_CFG), shadow_seeds=(0,))
